@@ -1,0 +1,26 @@
+"""Fictitious-system tightness: bound / simulated-completion ratio across
+random instances (the paper's §III-B upper-bound claim, quantified)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import greedy, jobs as J, network as N, schedule
+from .runtime_scaling import synthetic_network, jobs_for
+
+
+def run(verbose: bool = True, n_instances: int = 5) -> dict:
+    ratios = []
+    for seed in range(n_instances):
+        net = synthetic_network(16, seed)
+        batch = J.batch_jobs(jobs_for(16, 6, seed))
+        sol = greedy.greedy_route(net, batch)
+        sim = schedule.simulate(net, batch, sol.assign, sol.order)
+        assert sim.makespan <= sol.makespan_bound * (1 + 1e-6)
+        ratios.append(sol.makespan_bound / sim.makespan)
+    out = dict(mean_ratio=float(np.mean(ratios)),
+               max_ratio=float(np.max(ratios)),
+               min_ratio=float(np.min(ratios)))
+    if verbose:
+        print(f"  bound/simulated: mean {out['mean_ratio']:.3f} "
+              f"min {out['min_ratio']:.3f} max {out['max_ratio']:.3f}")
+    return out

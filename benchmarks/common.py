@@ -1,0 +1,48 @@
+"""Shared benchmark utilities + the paper's job mixes."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core import jobs as J
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    fn(*args, **kw)  # warm (jit)
+    t0 = time.time()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat
+
+
+def paper_jobs_small(seed: int) -> list:
+    """§V small topology: 2 VGG19 + 6 ResNet34, random src-dst."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(2):
+        s, d = rng.choice(5, 2, replace=False)
+        jobs.append(registry.get("vgg19").make_job(f"v{i}", int(s), int(d)))
+    for i in range(6):
+        s, d = rng.choice(5, 2, replace=False)
+        jobs.append(registry.get("resnet34").make_job(f"r{i}", int(s), int(d)))
+    return jobs
+
+
+def paper_jobs_large(seed: int) -> list:
+    """§V US backbone: 6 VGG19 + 2 ResNet34 + 2 hand-made models."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(6):
+        s, d = rng.choice(24, 2, replace=False)
+        jobs.append(registry.get("vgg19").make_job(f"v{i}", int(s), int(d)))
+    for i in range(2):
+        s, d = rng.choice(24, 2, replace=False)
+        jobs.append(registry.get("resnet34").make_job(f"r{i}", int(s), int(d)))
+    for i in range(2):
+        s, d = rng.choice(24, 2, replace=False)
+        jobs.append(J.synthetic_job(f"syn{i}", int(s), int(d), num_layers=24,
+                                    seed=seed + i, flops_scale=3e9,
+                                    bytes_scale=3e6))
+    return jobs

@@ -1,0 +1,94 @@
+"""§Perf hillclimb driver: run the three chosen cells through their
+optimization iterations and dump one JSON per (cell, iteration).
+
+Cells (chosen from the baseline roofline table, see EXPERIMENTS.md §Perf):
+  * deepseek_v2_236b x train_4k  — worst roofline fraction (memory-bound on
+    materialized MLA scores; temp 11 TB/dev)
+  * olmoe_1b_7b x train_4k       — most collective-bound
+  * gemma3_1b x decode_32k       — collective-bound inference cell (the
+    paper's serving regime; kv=1 makes TP16 pure overhead)
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--cell olmoe|gemma3|deepseek]
+(子processes are NOT used: must run in the dryrun-flagged interpreter.)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+import pathlib
+
+CELLS = {
+    "olmoe": [
+        # it1 REFUTED the EP-constraint hypothesis (see EXPERIMENTS §Perf):
+        # post-hoc sharding constraints on the dispatch buffer force GSPMD
+        # into extra reshards (X: 27 -> 168 s). Subsequent iterations drop it.
+        ("olmoe_1b_7b", "train_4k", "it1_ep_shard", {"moe_ep_shard": True}),
+        ("olmoe_1b_7b", "train_4k", "it2_flash", {"attn_impl": "flash"}),
+        ("olmoe_1b_7b", "train_4k", "it3_flash_dots",
+         {"attn_impl": "flash", "remat_policy": "dots"}),
+        # it2/it3 revealed the real bottleneck: the global-argsort dispatch
+        # is replicated by GSPMD. it4 localizes it per data shard.
+        ("olmoe_1b_7b", "train_4k", "it4_flash_local_moe",
+         {"attn_impl": "flash", "moe_local_dispatch": True}),
+        # it4 cut X 12.5x but the data-axis-only shard_map replicated the
+        # dispatch compute across 'model' (flops 9x). it5 shards the
+        # dispatch over both axes.
+        ("olmoe_1b_7b", "train_4k", "it5_flash_local_moe_2d",
+         {"attn_impl": "flash", "moe_local_dispatch": True, "_v": 2}),
+    ],
+    "gemma3": [
+        ("gemma3_1b", "decode_32k", "it1_dp_only", {"layout": "dp_only"}),
+        ("gemma3_1b", "decode_32k", "it2_dp_only_chunk",
+         {"layout": "dp_only", "attn_chunk_q": 512}),
+        ("gemma3_1b", "decode_32k", "it3_grouped_gqa",
+         {"gqa_grouped": True}),
+        ("gemma3_1b", "decode_32k", "it4_grouped_dp_attn",
+         {"gqa_grouped": True, "layout": "dp_attn"}),
+    ],
+    "deepseek": [
+        ("deepseek_v2_236b", "train_4k", "it1_flash",
+         {"attn_impl": "flash"}),
+        ("deepseek_v2_236b", "train_4k", "it2_flash_local_moe",
+         {"attn_impl": "flash", "moe_local_dispatch": True}),
+    ],
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    names = list(CELLS) if args.cell == "all" else [args.cell]
+    for name in names:
+        for arch, shape, tag, opts in CELLS[name]:
+            path = outdir / f"{arch}.{shape}.{tag}.json"
+            if path.exists():
+                print(f"[hillclimb] {tag}: cached")
+                continue
+            print(f"[hillclimb] {arch} x {shape} :: {tag} {opts}", flush=True)
+            opts = dict(opts)
+            opts.setdefault("scan_layers", False)
+            try:
+                rec = run_cell(arch, shape, False, opts=opts)
+            except Exception as e:
+                import traceback
+                rec = {"arch": arch, "shape": shape, "status": "fail",
+                       "error": str(e),
+                       "traceback": traceback.format_exc()[-1500:]}
+            rec["tag"] = tag
+            path.write_text(json.dumps(rec, indent=1))
+            coll = (rec.get("collectives") or {}).get("effective_bytes", 0)
+            print(f"[hillclimb] {tag}: {rec['status']} "
+                  f"flops/dev={rec.get('flops_per_device', 0):.3g} "
+                  f"bytes/dev={rec.get('bytes_accessed_per_device', 0):.3g} "
+                  f"coll_eff={coll:.3g} "
+                  f"compile={rec.get('compile_s', '-')}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

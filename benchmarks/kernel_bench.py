@@ -1,0 +1,47 @@
+"""Min-plus closure micro-benchmark (the routing hot-spot).
+
+Wall-clock numbers are CPU (the Pallas kernel runs in interpret mode on CPU
+and is validated for semantics, not speed); ``derived`` projects the TPU
+kernel time from the roofline model in DESIGN.md §3.3: the (min,+)
+contraction is VPU work at ~1 op/lane/cycle.  v5e VPU: 8 lanes x 128 sublanes
+x 4 MXU-adjacent ALUs ~ 4 TOP/s fp32; closure of a V-node graph needs
+ceil(log2 V) squarings of 2*V^3 ops each.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+VPU_OPS = 4e12
+HBM_BW = 819e9
+
+
+def run(verbose: bool = True, sizes=(64, 128, 256, 512)) -> list[dict]:
+    rows = []
+    for v in sizes:
+        w = jnp.where(jax.random.uniform(jax.random.PRNGKey(0), (v, v)) < 0.2,
+                      jax.random.uniform(jax.random.PRNGKey(1), (v, v)) * 5,
+                      jnp.float32(1e30))
+        closure = jax.jit(lambda x: ops.minplus_closure(x, use_pallas=False))
+        closure(w).block_until_ready()
+        t0 = time.time()
+        n_rep = 3
+        for _ in range(n_rep):
+            closure(w).block_until_ready()
+        cpu_s = (time.time() - t0) / n_rep
+        squarings = max(1, (v - 1).bit_length())
+        ops_total = squarings * 2 * v ** 3
+        bytes_total = squarings * 3 * v * v * 4
+        tpu_proj = max(ops_total / VPU_OPS, bytes_total / HBM_BW)
+        rows.append(dict(V=v, cpu_s=cpu_s, tpu_projected_s=tpu_proj,
+                         ops=ops_total))
+        if verbose:
+            print(f"  V={v:4d}: cpu {cpu_s*1e3:8.2f} ms   "
+                  f"tpu-roofline {tpu_proj*1e6:8.1f} us "
+                  f"({ops_total/1e9:.2f} Gop)")
+    return rows

@@ -1,0 +1,120 @@
+"""Generate the final EXPERIMENTS.md tables from the results JSONs.
+
+  PYTHONPATH=src python -m benchmarks.report   # rewrites the tail of
+                                               # EXPERIMENTS.md in place
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .roofline import row_terms
+
+MARK = "<!-- TABLES -->"
+
+
+def _fmt(x, digits=3):
+    if isinstance(x, float):
+        return f"{x:.{digits}g}"
+    return str(x)
+
+
+def roofline_table(dirpath: str, mesh_filter: str) -> str:
+    lines = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) |"
+        " dominant | roofline frac | useful ratio | temp GB/dev | src |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(pathlib.Path(dirpath).glob("*.json")):
+        rec = json.loads(path.read_text())
+        if mesh_filter not in path.stem:
+            continue
+        t = row_terms(rec)
+        if t.get("status") != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"SKIP | — | — | — | {str(t.get('reason'))[:70]} |")
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {_fmt(t['compute_s'])} | "
+            f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+            f"{t['dominant']} | {_fmt(t['roofline_fraction'])} | "
+            f"{_fmt(t['useful_ratio'])} | {_fmt(t['temp_gb'], 4)} | "
+            f"{t['flops_source']} |")
+    return "\n".join(lines)
+
+
+def hillclimb_table() -> str:
+    cells = {
+        "olmoe_1b_7b.train_4k": "results/dryrun_baseline/olmoe_1b_7b.train_4k.single.json",
+        "gemma3_1b.decode_32k": "results/dryrun_baseline/gemma3_1b.decode_32k.single.json",
+        "deepseek_v2_236b.train_4k": "results/dryrun_baseline/deepseek_v2_236b.train_4k.single.json",
+    }
+    lines = [
+        "| cell | iteration | t_compute | t_memory | t_collective | "
+        "step bound (s) | temp GB/dev | verdict |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cell, basepath in cells.items():
+        recs = [("baseline (paper-faithful)", json.loads(
+            pathlib.Path(basepath).read_text()))]
+        for p in sorted(pathlib.Path("results/hillclimb").glob(f"{cell}.*.json")):
+            recs.append((p.stem.split(".")[-1], json.loads(p.read_text())))
+        prev_bound = None
+        for tag, rec in recs:
+            t = row_terms(rec)
+            if t.get("status") != "ok":
+                lines.append(f"| {cell} | {tag} | — | — | — | FAIL | — | "
+                             f"{str(rec.get('error'))[:60]} |")
+                continue
+            bound = t["step_bound_s"]
+            verdict = ""
+            if prev_bound is not None:
+                verdict = ("improved "
+                           f"{prev_bound / bound:.2f}x" if bound < prev_bound
+                           else f"regressed {bound / prev_bound:.2f}x")
+            if tag == "it1_ep_shard":
+                verdict += " (hypothesis refuted; reverted)"
+            prev_bound = min(bound, prev_bound) if prev_bound else bound
+            lines.append(
+                f"| {cell} | {tag} | {_fmt(t['compute_s'])} | "
+                f"{_fmt(t['memory_s'])} | {_fmt(t['collective_s'])} | "
+                f"{_fmt(bound)} | {_fmt(t['temp_gb'], 4)} | {verdict} |")
+    return "\n".join(lines)
+
+
+def compile_stats(dirpath: str) -> str:
+    tot = {"single": [0, 0.0], "multi": [0, 0.0]}
+    fails = []
+    for path in pathlib.Path(dirpath).glob("*.json"):
+        rec = json.loads(path.read_text())
+        mesh = "multi" if path.stem.endswith("multi") else "single"
+        if rec["status"] == "ok":
+            tot[mesh][0] += 1
+            tot[mesh][1] += rec["compile_s"]
+        elif rec["status"] == "fail":
+            fails.append(path.stem)
+    out = [f"* single-pod (16,16): {tot['single'][0]} cells compiled "
+           f"({tot['single'][1]:.0f}s total compile)",
+           f"* multi-pod (2,16,16): {tot['multi'][0]} cells compiled "
+           f"({tot['multi'][1]:.0f}s total compile)"]
+    out.append(f"* failures: {fails if fails else 'none'}")
+    return "\n".join(out)
+
+
+def main():
+    md = pathlib.Path("EXPERIMENTS.md")
+    text = md.read_text().split(MARK)[0] + MARK + "\n\n"
+    text += "### Dry-run compile summary\n\n"
+    text += compile_stats("results/dryrun_baseline") + "\n\n"
+    text += "### Roofline — single-pod baseline (all 40 cells)\n\n"
+    text += roofline_table("results/dryrun_baseline", "single") + "\n\n"
+    text += "### Roofline — multi-pod (2 x 16 x 16)\n\n"
+    text += roofline_table("results/dryrun_baseline", "multi") + "\n\n"
+    text += "### §Perf hillclimb — before/after\n\n"
+    text += hillclimb_table() + "\n"
+    md.write_text(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

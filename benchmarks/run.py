@@ -1,0 +1,58 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,large,runtime,...]
+
+One benchmark per paper artifact (Fig. 5 small topology, §V large topology,
+the runtime-scaling claim, the §III-B bound-gap) plus the kernel
+micro-benchmark and the roofline table reader (deliverable g).  Each prints
+a ``name,us_per_call,derived`` CSV line; ``derived`` carries the benchmark's
+headline number.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    want = None if args.only == "all" else set(args.only.split(","))
+
+    results = []
+
+    def bench(name, fn, derive):
+        if want is not None and name not in want:
+            return
+        print(f"== {name} ==", flush=True)
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        results.append((name, dt * 1e6, derive(rows)))
+
+    from . import bound_gap, fig5_small, fig_large, kernel_bench, \
+        roofline, runtime_scaling
+
+    bench("fig5_small", fig5_small.run,
+          lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
+    bench("fig_large", fig_large.run,
+          lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
+    bench("runtime_scaling", runtime_scaling.run,
+          lambda r: f"greedyV{r[-1]['V']}={r[-1]['greedy_warm_s']:.2f}s" if r else "n/a")
+    bench("bound_gap", bound_gap.run,
+          lambda r: f"mean_ratio={r['mean_ratio']:.3f}" if r else "n/a")
+    bench("kernel_minplus", kernel_bench.run,
+          lambda r: f"tpuV{r[-1]['V']}={r[-1]['tpu_projected_s']*1e6:.0f}us" if r else "n/a")
+    bench("roofline", roofline.run,
+          lambda r: f"{sum(1 for x in r if x.get('status') == 'ok')}cells" if r else "n/a")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in results:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

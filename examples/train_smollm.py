@@ -1,0 +1,39 @@
+"""End-to-end training driver: train a reduced smollm for a few hundred
+steps on the deterministic synthetic pipeline, with checkpoints.
+
+    PYTHONPATH=src python examples/train_smollm.py [--steps 200]
+
+(The assignment's full configs are exercised by the 512-device dry-run; on
+this CPU container the example trains the reduced config and demonstrates
+loss descent + checkpoint/restart.)
+"""
+import sys
+import pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import argparse
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        res = train("smollm_135m", preset="smoke", steps=args.steps,
+                    batch=args.batch, seq=args.seq, ckpt_dir=ckpt_dir,
+                    ckpt_every=100, log_every=20, lr=3e-3)
+    first = sum(res.losses[:10]) / 10
+    last = sum(res.losses[-10:]) / 10
+    print(f"loss: first10 {first:.4f} -> last10 {last:.4f}")
+    assert last < first, "loss did not decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

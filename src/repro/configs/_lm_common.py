@@ -1,0 +1,40 @@
+"""Shared helpers for the LM-family architecture configs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import ModelConfig
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step-function ``batch`` argument.
+
+    Weak-type-correct, shardable, no device allocation (dry-run contract).
+    """
+    b, s = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    if spec.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif spec.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a KV cache of length s
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frames, cfg.d_model), cfg.dtype)
+        if spec.kind == "decode":
+            batch["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_frames, cfg.d_model), cfg.dtype)
+            del batch["frames"]
+    if cfg.family == "vlm" and spec.kind != "decode":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), cfg.dtype)
+    return batch

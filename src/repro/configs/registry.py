@@ -1,0 +1,37 @@
+"""--arch registry: the 10 assigned architectures (+ paper's own conv nets).
+
+Each entry provides:
+  * ``config()``        exact full config from the assignment table
+  * ``smoke_config()``  reduced same-family config for CPU smoke tests
+  * ``input_specs(cfg, shape, mesh=None)`` ShapeDtypeStructs for the dry-run
+  * ``cost_profile(cfg, ...)`` per-layer (c_jl FLOPs, d_jl bytes) for the
+    routing framework (the paper's jobs)
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+ARCH_IDS = [
+    "olmo_1b", "smollm_135m", "minicpm_2b", "gemma3_1b", "xlstm_125m",
+    "olmoe_1b_7b", "deepseek_v2_236b", "whisper_base", "zamba2_2_7b",
+    "phi3_vision_4_2b",
+]
+
+# paper's own evaluation models (cost profiles only — conv nets)
+PAPER_MODELS = ["vgg19", "resnet34"]
+
+
+def get(arch: str):
+    arch = arch.replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS + PAPER_MODELS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS + PAPER_MODELS}")
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def config(arch: str):
+    return get(arch).config()
+
+
+def smoke_config(arch: str):
+    return get(arch).smoke_config()

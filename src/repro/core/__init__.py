@@ -1,0 +1,24 @@
+# The paper's primary contribution: routing DNN inference jobs over a
+# distributed computing network via the layered-graph model (§III) and the
+# greedy / simulated-annealing algorithms (§IV), implemented as composable
+# JAX modules (jit/vmap/lax throughout; min-plus closures back onto the
+# Pallas tropical-matmul kernel in repro.kernels).
+from .network import (ComputeNetwork, INF, make_network, small_topology,
+                      us_backbone)
+from .jobs import InferenceJob, JobBatch, batch_jobs, synthetic_job
+from .routing import (Route, route_single, route_batch,
+                      cost_given_assignment, commit_assignment)
+from .greedy import GreedySolution, greedy_route
+from .annealing import SAResult, anneal, evaluate_solution
+from .schedule import SimResult, replay_solution, simulate
+from . import bounds, exact, layered_graph, shortest_path
+
+__all__ = [
+    "ComputeNetwork", "INF", "make_network", "small_topology", "us_backbone",
+    "InferenceJob", "JobBatch", "batch_jobs", "synthetic_job",
+    "Route", "route_single", "route_batch", "cost_given_assignment",
+    "commit_assignment", "GreedySolution", "greedy_route",
+    "SAResult", "anneal", "evaluate_solution",
+    "SimResult", "replay_solution", "simulate",
+    "bounds", "exact", "layered_graph", "shortest_path",
+]

@@ -1,0 +1,157 @@
+"""Algorithm 2: simulated annealing over (node assignment, job priority).
+
+Faithful to the paper: odd iterations re-assign a random layer of a random
+job to a random compute-capable node; even iterations swap two priorities;
+Metropolis acceptance with temperature T <- T * d until T_lim.
+
+The completion-time evaluator replays jobs in priority order against the
+fictitious-system queues, exactly like the greedy commit path, with
+transfers taking min-cost paths under the current queues.
+
+Beyond the paper (recorded separately in EXPERIMENTS.md): ``anneal`` vmaps K
+independent chains over one jitted move tape — a multi-start ladder that both
+improves solution quality and turns the algorithm into a single large batched
+tensor program (accelerator-friendly), and the whole annealing run is one
+``lax.scan`` => one XLA program instead of ~10^3 Python round trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import ComputeNetwork
+from .jobs import JobBatch
+from . import routing
+
+
+@dataclasses.dataclass(frozen=True)
+class SAResult:
+    assign: np.ndarray    # [J, Lmax]
+    priority: np.ndarray  # [J] job index per slot (slot 0 = highest)
+    bound: float          # fictitious-system makespan bound
+    history: np.ndarray   # [iters] best-so-far bound (chain-min when K > 1)
+
+
+def evaluate_solution(net: ComputeNetwork, batch: JobBatch, assign: jax.Array,
+                      prio: jax.Array) -> jax.Array:
+    """Fictitious-system makespan bound of a full solution."""
+
+    def step(cur, p):
+        j = prio[p]
+        args = (batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
+                batch.num_layers[j])
+        cost = routing.cost_given_assignment(cur, *args, assign[j])
+        cur = routing.commit_assignment(cur, *args, assign[j])
+        return cur, cost
+
+    _, costs = jax.lax.scan(step, net, jnp.arange(batch.num_jobs))
+    return jnp.max(costs)
+
+
+def _num_iters(t0: float, t_lim: float, d: float) -> int:
+    return max(1, int(math.ceil(math.log(t_lim / t0) / math.log(d))))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "k_boltz", "block_move_prob"))
+def _anneal_chain(net: ComputeNetwork, batch: JobBatch, key: jax.Array,
+                  comp_nodes: jax.Array, t0: float, d: float,
+                  init_assign: jax.Array | None = None,
+                  init_prio: jax.Array | None = None,
+                  *, iters: int, k_boltz: float = 1.0,
+                  block_move_prob: float = 0.0):
+    J, lmax = batch.num_jobs, batch.max_layers
+    k_init, k_tape = jax.random.split(key)
+    ka, kp = jax.random.split(k_init)
+    if init_assign is None:
+        assign0 = comp_nodes[jax.random.randint(
+            ka, (J, lmax), 0, comp_nodes.shape[0])].astype(jnp.int32)
+    else:
+        assign0 = jnp.asarray(init_assign, jnp.int32)
+    if init_prio is None:
+        prio0 = jax.random.permutation(kp, jnp.arange(J, dtype=jnp.int32))
+    else:
+        prio0 = jnp.asarray(init_prio, jnp.int32)
+    cost0 = evaluate_solution(net, batch, assign0, prio0)
+
+    def step(carry, xs):
+        assign, prio, cost, best_a, best_p, best_c, temp = carry
+        it, k = xs
+        kj, kl, kw, ks, ku, kb = jax.random.split(k, 6)
+        odd = (it % 2) == 0  # first iteration is the paper's "odd" move
+
+        # -- odd move: reassign (job j, layer l) -> node w.  With
+        # block_move_prob > 0 (beyond-paper "SA+"), sometimes move the whole
+        # job to w — mirrors the single-fast-node optima the paper observes
+        # at high link capacity and radically shortens the walk to them.
+        j = jax.random.randint(kj, (), 0, J)
+        l = jax.random.randint(kl, (), 0, jnp.maximum(batch.num_layers[j], 1))
+        w = comp_nodes[jax.random.randint(kw, (), 0, comp_nodes.shape[0])]
+        single = assign.at[j, l].set(w.astype(jnp.int32))
+        block = assign.at[j].set(w.astype(jnp.int32))
+        use_block = jax.random.uniform(kb) < block_move_prob
+        assign_new = jnp.where(use_block, block, single)
+
+        # -- even move: swap two priority slots
+        p12 = jax.random.randint(ks, (2,), 0, J)
+        prio_sw = prio.at[p12[0]].set(prio[p12[1]]).at[p12[1]].set(prio[p12[0]])
+
+        cand_assign = jnp.where(odd, assign_new, assign)
+        cand_prio = jnp.where(odd, prio, prio_sw)
+        cand_cost = evaluate_solution(net, batch, cand_assign, cand_prio)
+
+        accept = jax.random.uniform(ku) < jnp.minimum(
+            1.0, jnp.exp((cost - cand_cost) / (k_boltz * temp)))
+        assign = jnp.where(accept, cand_assign, assign)
+        prio = jnp.where(accept, cand_prio, prio)
+        cost = jnp.where(accept, cand_cost, cost)
+
+        better = cost < best_c
+        best_a = jnp.where(better, assign, best_a)
+        best_p = jnp.where(better, prio, best_p)
+        best_c = jnp.where(better, cost, best_c)
+        return (assign, prio, cost, best_a, best_p, best_c, temp * d), best_c
+
+    keys = jax.random.split(k_tape, iters)
+    carry0 = (assign0, prio0, cost0, assign0, prio0, cost0, jnp.float32(t0))
+    carry, hist = jax.lax.scan(step, carry0, (jnp.arange(iters), keys))
+    _, _, _, best_a, best_p, best_c, _ = carry
+    return best_a, best_p, best_c, hist
+
+
+def anneal(net: ComputeNetwork, batch: JobBatch, *, seed: int = 0,
+           t0: float = 1.0, t_lim: float = 1e-3, d: float = 0.995,
+           k_boltz: float = 1.0, num_chains: int = 1,
+           init: str = "random", block_move_prob: float = 0.0) -> SAResult:
+    """Run Algorithm 2.
+
+    Defaults are paper-faithful.  Beyond-paper knobs (recorded separately in
+    EXPERIMENTS.md): ``num_chains`` (vmapped multi-start), ``init='greedy'``
+    (warm start from Algorithm 1 — SA then only refines) and
+    ``block_move_prob`` (whole-job moves).
+    """
+    iters = _num_iters(t0, t_lim, d)
+    mu = np.asarray(net.mu_node)
+    comp_nodes = jnp.asarray(np.nonzero(mu > 0)[0].astype(np.int32))
+    init_assign = init_prio = None
+    if init == "greedy":
+        from . import greedy as _greedy
+        sol = _greedy.greedy_route(net, batch)
+        init_assign = jnp.asarray(sol.assign, jnp.int32)
+        init_prio = jnp.asarray(sol.order, jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), num_chains)
+    run = functools.partial(_anneal_chain, net, batch,
+                            comp_nodes=comp_nodes, t0=t0, d=d,
+                            init_assign=init_assign, init_prio=init_prio,
+                            iters=iters, k_boltz=k_boltz,
+                            block_move_prob=block_move_prob)
+    best_a, best_p, best_c, hist = jax.vmap(run)(keys)
+    best_a, best_p, best_c, hist = jax.device_get((best_a, best_p, best_c, hist))
+    i = int(np.argmin(best_c))
+    return SAResult(assign=np.asarray(best_a[i]), priority=np.asarray(best_p[i]),
+                    bound=float(best_c[i]), history=np.min(hist, axis=0))

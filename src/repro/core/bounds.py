@@ -1,0 +1,94 @@
+"""Theorem 2 approximation-ratio machinery.
+
+``alpha(net, jobs)`` evaluates the paper's bound
+
+    alpha = max{ 2*a_tx, 2(L+1)(|V_p|+|E_p|)*a_tx / k, (1+|E_p|/|V_p|)*a_cp }
+            * (2 - 1/(|V_p|+|E_p|))
+
+with |V_p| = #nodes with positive compute, |E_p| = #links with finite
+capacity, k = edge connectivity, a_tx / a_cp the heterogeneity ratios, and
+h_L / h_S the longest/shortest s-t hop counts (longest simple path is
+exact for small graphs, else upper-bounded by |V|-1 — an upper bound on
+h_L only ever loosens alpha, so the bound stays valid).
+
+``service_lower_bounds`` gives Lemma 8's two lower bounds on T*.
+"""
+from __future__ import annotations
+
+import itertools
+
+import networkx as nx
+import numpy as np
+
+from .network import ComputeNetwork
+from .jobs import InferenceJob
+from . import routing
+
+
+def _nx_graph(net: ComputeNetwork) -> nx.Graph:
+    g = nx.Graph()
+    mu = np.asarray(net.mu_link)
+    v = net.num_nodes
+    g.add_nodes_from(range(v))
+    for u in range(v):
+        for w in range(v):
+            if mu[u, w] > 0:
+                g.add_edge(u, w)
+    return g
+
+
+def _longest_simple_path_len(g: nx.Graph, s: int, t: int, exact_max_nodes: int = 10) -> int:
+    if g.number_of_nodes() <= exact_max_nodes:
+        best = 0
+        for path in nx.all_simple_paths(g, s, t):
+            best = max(best, len(path) - 1)
+        return best
+    return g.number_of_nodes() - 1  # safe upper bound
+
+
+def alpha(net: ComputeNetwork, jobs: list[InferenceJob]) -> float:
+    g = _nx_graph(net)
+    mu_n = np.asarray(net.mu_node, np.float64)
+    mu_l = np.asarray(net.mu_link, np.float64)
+    comp_nodes = mu_n[mu_n > 0]
+    n_v = int((mu_n > 0).sum())
+    n_e = g.number_of_edges()
+    k = nx.edge_connectivity(g)
+    L = max(j.num_layers for j in jobs)
+
+    h_long = max(_longest_simple_path_len(g, j.src, j.dst) for j in jobs)
+    h_short = min(nx.shortest_path_length(g, j.src, j.dst) for j in jobs)
+    h_short = max(h_short, 1)
+
+    d_all = np.concatenate([j.data for j in jobs])
+    d_all = d_all[d_all > 0]
+    links = mu_l[mu_l > 0]
+    a_tx = (h_long * d_all.max() * links.max()) / (h_short * d_all.min() * links.min())
+    a_cp = comp_nodes.max() / comp_nodes.min()
+
+    core = max(2 * a_tx,
+               2 * (L + 1) * (n_v + n_e) * a_tx / max(k, 1),
+               (1 + n_e / n_v) * a_cp)
+    return float(core * (2 - 1.0 / (n_v + n_e)))
+
+
+def corollary1_factor(net: ComputeNetwork) -> float:
+    """2 - 1/|V_p| (zero network delay, identical compute capacities)."""
+    mu_n = np.asarray(net.mu_node)
+    n_v = int((mu_n > 0).sum())
+    return 2 - 1.0 / n_v
+
+
+def service_lower_bounds(net: ComputeNetwork, batch) -> tuple[np.ndarray, float]:
+    """Lemma 8: per-job S^SS (a lower bound on T*) and the averaged bound.
+
+    S_j^SS is the fastest possible service time of job j = its optimal route
+    in the empty-queue network (waiting terms vanish, objective = service).
+    """
+    empty = net.reset_queues()
+    r = routing.route_batch(empty, batch)
+    s_ss = np.asarray(r.cost, np.float64)
+    mu_n = np.asarray(net.mu_node)
+    g = _nx_graph(net)
+    denom = int((mu_n > 0).sum()) + g.number_of_edges()
+    return s_ss, float(s_ss.sum() / denom)

@@ -1,0 +1,102 @@
+"""Exact oracles (host-side numpy) used to validate the JAX routing DP.
+
+``exact_route_bitmask`` solves the single-job ILP (1)-(5) *exactly*,
+including the once-per-node z_u semantics, by dynamic programming over
+(layer, node, set-of-wait-charged-nodes).  Exponential in |V_p| but exact —
+the oracle for small randomized instances (V <= ~14).
+
+``brute_force_makespan`` enumerates (assignments x priorities) on tiny
+instances and simulates the actual system, giving the true optimum T* for
+approximation-ratio tests (Theorem 2 / Corollary 1).
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from .network import ComputeNetwork
+
+_INF = 1e30
+
+
+def _np_closure(w: np.ndarray) -> np.ndarray:
+    n = w.shape[-1]
+    d = w.copy()
+    idx = np.arange(n)
+    d[..., idx, idx] = np.minimum(d[..., idx, idx], 0.0)
+    for _ in range(max(1, int(np.ceil(np.log2(max(n - 1, 2)))))):
+        d = np.min(d[..., :, :, None] + d[..., None, :, :], axis=-2)
+    return d
+
+
+def _net_np(net: ComputeNetwork):
+    mu_n = np.asarray(net.mu_node, np.float64)
+    mu_l = np.asarray(net.mu_link, np.float64)
+    q_n = np.asarray(net.q_node, np.float64)
+    q_l = np.asarray(net.q_link, np.float64)
+    v = mu_n.shape[0]
+    inv_l = np.where(mu_l > 0, 1.0 / np.maximum(mu_l, 1e-30), _INF)
+    inv_l[np.arange(v), np.arange(v)] = 0.0
+    wait_l = np.where(mu_l > 0, q_l / np.maximum(mu_l, 1e-30), 0.0)
+    wait_l[np.arange(v), np.arange(v)] = 0.0
+    inv_n = np.where(mu_n > 0, 1.0 / np.maximum(mu_n, 1e-30), _INF)
+    wait_n = np.where(mu_n > 0, q_n / np.maximum(mu_n, 1e-30), 0.0)
+    return inv_l, wait_l, inv_n, wait_n
+
+
+def layer_weights_np(net: ComputeNetwork, data: np.ndarray) -> np.ndarray:
+    inv_l, wait_l, _, _ = _net_np(net)
+    w = data[:, None, None] * inv_l[None] + wait_l[None]
+    return np.minimum(w, _INF)
+
+
+def exact_route_bitmask(net: ComputeNetwork, comp: np.ndarray, data: np.ndarray,
+                        src: int, dst: int) -> tuple[float, list[int]]:
+    """Exact optimum of ILP (1)-(5): min over paths of service + once-per-node waits."""
+    inv_l, wait_l, inv_n, wait_n = _net_np(net)
+    v = inv_n.shape[0]
+    if v > 16:
+        raise ValueError("bitmask oracle is for small graphs")
+    L = len(comp)
+    t = _np_closure(layer_weights_np(net, np.asarray(data, np.float64)))
+
+    full = 1 << v
+    f = np.full((v, full), _INF)
+    bp: dict[tuple[int, int, int], tuple[int, int]] = {}
+    for u in range(v):
+        s = 1 << u
+        f[u, s] = t[0, src, u] + wait_n[u] + comp[0] * inv_n[u]
+    for l in range(2, L + 1):
+        g = np.full((v, full), _INF)
+        for mask in range(full):
+            row = f[:, mask]
+            if np.all(row >= _INF):
+                continue
+            for u in range(v):
+                if row[u] >= _INF:
+                    continue
+                for w_ in range(v):
+                    nm = mask | (1 << w_)
+                    extra = 0.0 if (mask >> w_) & 1 else wait_n[w_]
+                    c = row[u] + t[l - 1, u, w_] + extra + comp[l - 1] * inv_n[w_]
+                    if c < g[w_, nm] - 1e-15:
+                        g[w_, nm] = c
+                        bp[(l, w_, nm)] = (u, mask)
+        f = g
+    best = _INF
+    arg = None
+    for mask in range(full):
+        for u in range(v):
+            c = f[u, mask] + t[L, u, dst]
+            if c < best - 1e-15:
+                best, arg = c, (u, mask)
+    assign = []
+    if arg is not None:
+        u, mask = arg
+        assign = [u]
+        for l in range(L, 1, -1):
+            u, mask = bp[(l, u, mask)]
+            assign.append(u)
+        assign.reverse()
+    return float(best), assign

@@ -1,0 +1,135 @@
+"""Algorithm 1: greedy multi-job routing.
+
+Each round routes *every* unrouted job optimally against the current queue
+state (a vmapped batch of single-job DPs -> one batched stack of min-plus
+closures, the kernel hot-spot), gives the earliest-finishing job the next
+priority slot, and commits its load to the queues (Alg. 1 line 3).
+
+The round body is jit-compiled once per (J, Lmax, V) shape; the J-round loop
+runs in Python so solutions stream out incrementally (and J is small next to
+the per-round tensor work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .network import INF, ComputeNetwork
+from .jobs import JobBatch
+from . import routing
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedySolution:
+    order: np.ndarray        # [J] job indices, highest priority first
+    priority: np.ndarray     # [J] priority slot of each job (0 = highest)
+    assign: np.ndarray       # [J, Lmax] compute node per layer
+    bounds: np.ndarray       # [J] fictitious-system completion bound C_j(Q_p)
+    net: ComputeNetwork      # final queue state
+
+    @property
+    def makespan_bound(self) -> float:
+        return float(np.max(self.bounds))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _round(net: ComputeNetwork, batch: JobBatch, routed: jax.Array,
+           *, use_pallas: bool | None = None):
+    r = routing.route_batch(net, batch, use_pallas=use_pallas)
+    costs = jnp.where(routed, INF, r.cost)
+    j = jnp.argmin(costs).astype(jnp.int32)
+    net2 = routing.commit_assignment(
+        net, batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
+        batch.num_layers[j], r.assign[j])
+    return j, r.cost[j], r.assign[j], net2
+
+
+def greedy_route(net: ComputeNetwork, batch: JobBatch,
+                 *, use_pallas: bool | None = None,
+                 lazy: bool = False) -> GreedySolution:
+    """Run Algorithm 1 to completion.
+
+    ``lazy=True`` is the beyond-paper *lazy greedy* (EXPERIMENTS.md §Perf):
+    queues only grow, so every job's completion bound is monotone
+    non-decreasing across rounds — a stale cached bound is a valid lower
+    bound.  Each round re-routes only the cached argmin until it proves
+    itself fresh-minimal, committing after O(1) expected re-routes instead
+    of re-routing all J jobs.  Produces a solution with the same guarantee
+    (it IS Algorithm 1 up to tie-breaking).
+    """
+    if lazy:
+        return _greedy_lazy(net, batch, use_pallas=use_pallas)
+    J, lmax = batch.num_jobs, batch.max_layers
+    routed = jnp.zeros((J,), bool)
+    order = np.zeros((J,), np.int32)
+    assign = np.zeros((J, lmax), np.int32)
+    bounds = np.zeros((J,), np.float64)
+    cur = net
+    for p in range(J):
+        j, cost, a, cur = _round(cur, batch, routed, use_pallas=use_pallas)
+        j = int(j)
+        order[p] = j
+        bounds[j] = float(cost)
+        assign[j] = np.asarray(a)
+        routed = routed.at[j].set(True)
+    priority = np.empty((J,), np.int32)
+    priority[order] = np.arange(J, dtype=np.int32)
+    return GreedySolution(order=order, priority=priority, assign=assign,
+                          bounds=bounds, net=cur)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _route_one(net, batch, j, *, use_pallas=None):
+    r = routing.route_single(net, batch.comp[j], batch.data[j], batch.src[j],
+                             batch.dst[j], batch.num_layers[j],
+                             use_pallas=use_pallas)
+    return r.cost, r.assign
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _commit_one(net, batch, j, assign, *, use_pallas=None):
+    return routing.commit_assignment(
+        net, batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
+        batch.num_layers[j], jnp.asarray(assign))
+
+
+def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
+                 *, use_pallas: bool | None = None) -> GreedySolution:
+    J, lmax = batch.num_jobs, batch.max_layers
+    r0 = routing.route_batch(net, batch, use_pallas=use_pallas)
+    cost = np.array(r0.cost, np.float64)             # cached lower bounds
+    assign_c = np.array(r0.assign)                   # (writable copies)
+    fresh = np.ones((J,), bool)
+
+    order = np.zeros((J,), np.int32)
+    assign = np.zeros((J, lmax), np.int32)
+    bounds = np.zeros((J,), np.float64)
+    remaining = set(range(J))
+    cur = net
+    n_routings = J
+    for p in range(J):
+        while True:
+            j = min(remaining, key=lambda x: cost[x])
+            if fresh[j]:
+                break
+            c, a = _route_one(cur, batch, j, use_pallas=use_pallas)
+            cost[j], assign_c[j] = float(c), np.asarray(a)
+            fresh[j] = True
+            n_routings += 1
+        order[p] = j
+        bounds[j] = cost[j]
+        assign[j] = assign_c[j]
+        remaining.discard(j)
+        cur = _commit_one(cur, batch, j, assign_c[j], use_pallas=use_pallas)
+        for x in remaining:
+            fresh[x] = False
+    priority = np.empty((J,), np.int32)
+    priority[order] = np.arange(J, dtype=np.int32)
+    sol = GreedySolution(order=order, priority=priority, assign=assign,
+                         bounds=bounds, net=cur)
+    object.__setattr__(sol, "_n_routings", n_routings)
+    return sol

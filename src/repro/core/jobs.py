@@ -1,0 +1,93 @@
+"""DNN inference jobs.
+
+A job j is the feedforward computation of a DNN model with L_j layers,
+generated at a source node and whose result must be delivered to a
+destination node.  ``comp[l]`` (FLOPs) is the load of computing layer l+1
+(paper's c_{j,l+1}); ``data[l]`` (bytes) is the output size of layer l
+(paper's d_{jl}), with ``data[0]`` the input data size and ``data[L]`` the
+inference-result size.
+
+For vmap-friendly multi-job routing, jobs are padded to a common max layer
+count in :class:`JobBatch`; padded layers have zero compute and zero data and
+are masked out of every cost term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceJob:
+    name: str
+    src: int
+    dst: int
+    comp: np.ndarray  # [L] FLOPs per layer
+    data: np.ndarray  # [L+1] bytes: input, per-layer outputs
+
+    @property
+    def num_layers(self) -> int:
+        return int(self.comp.shape[0])
+
+    def __post_init__(self):
+        if self.data.shape[0] != self.comp.shape[0] + 1:
+            raise ValueError("data must have L+1 entries (input + L layer outputs)")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JobBatch:
+    """Padded batch of J jobs (a JAX pytree)."""
+
+    src: jax.Array        # [J] int32
+    dst: jax.Array        # [J] int32
+    comp: jax.Array       # [J, Lmax] FLOPs (0 beyond L_j)
+    data: jax.Array       # [J, Lmax+1] bytes (0 beyond L_j)
+    num_layers: jax.Array  # [J] int32
+
+    @property
+    def num_jobs(self) -> int:
+        return self.src.shape[0]
+
+    @property
+    def max_layers(self) -> int:
+        return self.comp.shape[1]
+
+
+def batch_jobs(jobs: Sequence[InferenceJob]) -> JobBatch:
+    if not jobs:
+        raise ValueError("empty job list")
+    lmax = max(j.num_layers for j in jobs)
+    J = len(jobs)
+    comp = np.zeros((J, lmax), np.float32)
+    data = np.zeros((J, lmax + 1), np.float32)
+    src = np.zeros((J,), np.int32)
+    dst = np.zeros((J,), np.int32)
+    nl = np.zeros((J,), np.int32)
+    for i, j in enumerate(jobs):
+        L = j.num_layers
+        comp[i, :L] = j.comp
+        data[i, : L + 1] = j.data
+        # Padded "layers" carry the final output forward at zero cost: the
+        # data entry stays 0 so transfers of padded layers are free and the
+        # true final transfer d_L is handled by the masked DP epilogue.
+        src[i], dst[i], nl[i] = j.src, j.dst, L
+    return JobBatch(
+        src=jnp.asarray(src), dst=jnp.asarray(dst), comp=jnp.asarray(comp),
+        data=jnp.asarray(data), num_layers=jnp.asarray(nl),
+    )
+
+
+def synthetic_job(
+    name: str, src: int, dst: int, num_layers: int, *, seed: int = 0,
+    flops_scale: float = 1e9, bytes_scale: float = 1e6,
+) -> InferenceJob:
+    """Random job for property tests / the paper's hand-made third model."""
+    rng = np.random.default_rng(seed)
+    comp = rng.uniform(0.2, 2.0, size=num_layers).astype(np.float32) * flops_scale
+    data = rng.uniform(0.1, 1.5, size=num_layers + 1).astype(np.float32) * bytes_scale
+    return InferenceJob(name, src, dst, comp, data)

@@ -1,0 +1,165 @@
+"""Physical computing network model G_p = (V_p, E_p).
+
+Nodes carry compute capacity ``mu_node`` (FLOP/s) and a compute queue
+``q_node`` (FLOPs of unfinished higher-priority work).  Directed links carry
+transmission capacity ``mu_link`` (bytes/s) and a transmission queue
+``q_link`` (bytes).  Everything is stored densely as ``[V]`` / ``[V, V]``
+arrays so the whole structure is a JAX pytree and can flow through jit/vmap.
+
+Absent links have ``mu_link == 0``; :func:`link_weight` maps them to ``INF``.
+``INF`` is a large *finite* sentinel (not ``jnp.inf``) so that min-plus
+arithmetic never produces NaNs (``inf - inf``) and argmins stay well-defined.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.float32(1e30)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ComputeNetwork:
+    """Dense representation of the physical computing network."""
+
+    mu_node: jax.Array  # [V] FLOP/s  (0 = no compute resources at node)
+    mu_link: jax.Array  # [V, V] bytes/s (0 = no link)
+    q_node: jax.Array   # [V] FLOPs queued
+    q_link: jax.Array   # [V, V] bytes queued
+
+    @property
+    def num_nodes(self) -> int:
+        return self.mu_node.shape[0]
+
+    def with_queues(self, q_node: jax.Array, q_link: jax.Array) -> "ComputeNetwork":
+        return dataclasses.replace(self, q_node=q_node, q_link=q_link)
+
+    def reset_queues(self) -> "ComputeNetwork":
+        return self.with_queues(jnp.zeros_like(self.q_node), jnp.zeros_like(self.q_link))
+
+
+def make_network(
+    num_nodes: int,
+    edges: Iterable[tuple[int, int, float]],
+    node_caps: Sequence[float],
+    *,
+    bidirectional: bool = True,
+) -> ComputeNetwork:
+    """Build a :class:`ComputeNetwork` from an edge list.
+
+    Args:
+      num_nodes: |V_p|.
+      edges: (u, v, capacity bytes/s) triples.
+      node_caps: [V] compute capacities in FLOP/s.
+      bidirectional: mirror every edge (the paper assumes bidirectional links).
+    """
+    mu_link = np.zeros((num_nodes, num_nodes), np.float32)
+    for u, v, cap in edges:
+        mu_link[u, v] = cap
+        if bidirectional:
+            mu_link[v, u] = cap
+    mu_node = np.asarray(node_caps, np.float32)
+    if mu_node.shape != (num_nodes,):
+        raise ValueError(f"node_caps must have shape ({num_nodes},)")
+    return ComputeNetwork(
+        mu_node=jnp.asarray(mu_node),
+        mu_link=jnp.asarray(mu_link),
+        q_node=jnp.zeros((num_nodes,), jnp.float32),
+        q_link=jnp.zeros((num_nodes, num_nodes), jnp.float32),
+    )
+
+
+def link_invrate(net: ComputeNetwork) -> jax.Array:
+    """[V,V] reciprocal link capacity; INF where there is no link.
+
+    The diagonal is 0: staying at a node costs nothing to "transfer".
+    """
+    v = net.num_nodes
+    inv = jnp.where(net.mu_link > 0, 1.0 / jnp.maximum(net.mu_link, 1e-30), INF)
+    return inv.at[jnp.arange(v), jnp.arange(v)].set(0.0)
+
+
+def link_wait(net: ComputeNetwork) -> jax.Array:
+    """[V,V] per-traversal waiting time Q_uv / mu_uv; 0 on the diagonal."""
+    v = net.num_nodes
+    w = jnp.where(net.mu_link > 0, net.q_link / jnp.maximum(net.mu_link, 1e-30), 0.0)
+    return w.at[jnp.arange(v), jnp.arange(v)].set(0.0)
+
+
+def node_invrate(net: ComputeNetwork) -> jax.Array:
+    """[V] reciprocal compute capacity; INF where the node has no compute."""
+    return jnp.where(net.mu_node > 0, 1.0 / jnp.maximum(net.mu_node, 1e-30), INF)
+
+
+def node_wait(net: ComputeNetwork) -> jax.Array:
+    """[V] compute waiting time Q_u / mu_u; 0 for compute-less nodes."""
+    return jnp.where(net.mu_node > 0, net.q_node / jnp.maximum(net.mu_node, 1e-30), 0.0)
+
+
+def edge_list(net: ComputeNetwork) -> list[tuple[int, int]]:
+    """Directed edges (host-side helper)."""
+    mu = np.asarray(net.mu_link)
+    us, vs = np.nonzero(mu > 0)
+    return list(zip(us.tolist(), vs.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# The paper's two evaluation topologies.
+# ---------------------------------------------------------------------------
+
+def small_topology(*, capacity_scale: float = 1.0) -> tuple[ComputeNetwork, list[str]]:
+    """The 5-node topology of Fig. 2 / §V.
+
+    Nodes: s, u, w, v, t with compute capacities 200/70/50/50/30 GFLOP/s.
+    Links: s-u, s-w, u-w, u-v, w-v, w-t, v-t with capacities 125 or 375 MB/s.
+    ``capacity_scale`` multiplies the *link* capacities (the paper scans a
+    universal scale factor, e.g. 1e-4).
+    """
+    names = ["s", "u", "w", "v", "t"]
+    G = 1e9
+    MB = 1e6
+    node_caps = [200 * G, 70 * G, 50 * G, 50 * G, 30 * G]
+    edges = [
+        (0, 1, 375 * MB), (0, 2, 125 * MB), (1, 2, 125 * MB),
+        (1, 3, 375 * MB), (2, 3, 125 * MB), (2, 4, 375 * MB),
+        (3, 4, 125 * MB),
+    ]
+    edges = [(u, v, c * capacity_scale) for u, v, c in edges]
+    return make_network(5, edges, node_caps), names
+
+
+_US_BACKBONE_EDGES = [
+    # 24-node US backbone (USNET-style, 43 bidirectional links).  The paper's
+    # Fig. 4 is an image; this is the standard USNET connectivity (documented
+    # approximation, see DESIGN.md §5).
+    (0, 1), (0, 5), (1, 2), (1, 5), (2, 3), (2, 4), (3, 4), (3, 6),
+    (4, 7), (5, 8), (5, 10), (6, 7), (6, 9), (7, 9), (8, 9), (8, 10),
+    (9, 12), (10, 11), (10, 13), (11, 12), (11, 14), (12, 15), (13, 14),
+    (13, 16), (14, 15), (14, 18), (15, 19), (16, 17), (16, 20), (17, 18),
+    (17, 21), (18, 19), (18, 22), (19, 23), (20, 21), (21, 22), (22, 23),
+    (2, 6), (9, 13), (12, 14), (20, 22), (4, 6), (11, 15),
+]
+
+
+def us_backbone(*, capacity_scale: float = 1.0, seed: int = 0) -> tuple[ComputeNetwork, list[str]]:
+    """The 24-node US backbone of Fig. 4.
+
+    Node compute capacities follow the paper: [30, 50, 200, 100, 70] repeating
+    in increasing node order. Link capacities use the same {125, 375} MB/s mix
+    as the small topology (deterministic per-edge choice by parity of u+v).
+    """
+    G = 1e9
+    MB = 1e6
+    caps_cycle = [30, 50, 200, 100, 70]
+    node_caps = [caps_cycle[i % 5] * G for i in range(24)]
+    edges = []
+    for (u, v) in _US_BACKBONE_EDGES:
+        cap = (375 if (u + v) % 2 == 0 else 125) * MB
+        edges.append((u, v, cap * capacity_scale))
+    names = [f"n{i}" for i in range(24)]
+    return make_network(24, edges, node_caps), names

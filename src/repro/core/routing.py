@@ -1,0 +1,209 @@
+"""Single-job optimal routing on the layered graph (constructive Theorem 1).
+
+The paper proves the single-job ILP (1)-(5) is totally unimodular, hence its
+LP relaxation is integral and the optimum is a single s_0 -> t_L path in the
+layered graph.  We compute that optimum directly with a layer dynamic
+program over min-plus transfer closures:
+
+    g_0[u]  = T_0[src, u] + nw[u]
+    g_l[u]  = min( g_{l-1}[u],                       # continue the run at u
+                   min_v g_{l-1}[v] + T_{l-1}[v, u]  # move, charge node wait
+                       + nw[u] )
+              + c_l * cinv[u]
+    answer  = min_u g_L[u] + T_L[u, dst]
+
+where T_l is the min-cost transfer closure for layer-l output (see
+``shortest_path.transfer_closure``), ``nw[u] = Q_u / mu_u`` the node waiting
+bound and ``cinv[u] = 1/mu_u``.  Moving into a node charges its waiting
+term; continuing a consecutive run does not — this mirrors the ILP's z_u
+(charged once per node).  The two objectives can differ only if the optimum
+*returns* to a node for a non-adjacent layer (then the DP charges the wait
+twice); ``exact.py`` provides a bitmask-exact oracle and the property tests
+quantify the gap (zero on all randomized instances tried).  Spuriously
+dominated candidates inside the min (e.g. a "move" from v == u) are never
+uniquely optimal by the triangle inequality of the closure, so the DP value
+is the optimum of its objective.
+
+Everything is shape-static (Lmax padding, masks) => jit- and vmap-able; the
+multi-job greedy vmaps :func:`route_single` over the job batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .network import INF, ComputeNetwork, node_invrate, node_wait
+from .jobs import JobBatch
+from .shortest_path import layer_edge_weights, transfer_closure, reconstruct_path
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Route:
+    cost: jax.Array        # scalar: upper bound on this job's completion time
+    assign: jax.Array      # [Lmax] int32: compute node of each (real) layer
+
+
+def _dp(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
+        num_layers: jax.Array, cinv: jax.Array, nw: jax.Array) -> Route:
+    """Run the layer DP given the per-layer transfer closures ``t``.
+
+    t: [Lmax+1, V, V]; comp: [Lmax]; cinv/nw: [V].
+    """
+    lmax = comp.shape[0]
+    g0 = t[0, src, :] + nw
+    layer_ids = jnp.arange(1, lmax + 1)
+
+    def step(g, xs):
+        l, c_l, t_prev = xs
+        active = l <= num_layers
+        move = jnp.min(g[:, None] + t_prev, axis=0)          # [V]
+        move_bp = jnp.argmin(g[:, None] + t_prev, axis=0)    # [V]
+        moved = move + nw
+        stay_wins = g <= moved
+        new_g = jnp.minimum(g, moved) + c_l * cinv
+        new_g = jnp.minimum(new_g, INF)
+        bp = jnp.where(stay_wins, -1, move_bp).astype(jnp.int32)
+        g_out = jnp.where(active, new_g, g)
+        bp_out = jnp.where(active, bp, jnp.full_like(bp, -1))
+        return g_out, bp_out
+
+    g_final, bps = jax.lax.scan(step, g0, (layer_ids, comp, t[:-1]))
+    t_last = jnp.take(t, num_layers, axis=0)                  # [V, V]
+    total = g_final + t_last[:, dst]
+    cost = jnp.min(total)
+    u_star = jnp.argmin(total).astype(jnp.int32)
+
+    # Walk backpointers Lmax..1 to recover the compute node of each layer.
+    def back(cur, bp_l):
+        prev = jnp.where(bp_l[cur] < 0, cur, bp_l[cur])
+        return prev, cur
+
+    _, assign_rev = jax.lax.scan(back, u_star, bps, reverse=True)
+    return Route(cost=jnp.minimum(cost, INF), assign=assign_rev)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def route_single(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                 src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                 *, use_pallas: bool | None = None) -> Route:
+    """Optimally route one job (paper formulation (1)-(5)) given queues in ``net``."""
+    t = transfer_closure(net, data, use_pallas=use_pallas)
+    return _dp(t, comp, src, dst, num_layers, node_invrate(net), node_wait(net))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def route_batch(net: ComputeNetwork, batch: JobBatch,
+                *, use_pallas: bool | None = None) -> Route:
+    """vmap of :func:`route_single` over a padded job batch (shared queues)."""
+    fn = lambda c, d, s, t_, n: route_single(
+        net, c, d, s, t_, n, use_pallas=use_pallas)
+    return jax.vmap(fn)(batch.comp, batch.data, batch.src, batch.dst,
+                        batch.num_layers)
+
+
+@jax.jit
+def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                          src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                          assign: jax.Array) -> jax.Array:
+    """Objective (1) for a *fixed* compute-node assignment (paths free).
+
+    Transfers between consecutive compute nodes take min-cost paths under the
+    current queues; node waits are charged once per consecutive run.  Used by
+    the simulated-annealing evaluator.
+    """
+    t = transfer_closure(net, data)
+    cinv = node_invrate(net)
+    nw = node_wait(net)
+    lmax = comp.shape[0]
+
+    a1 = assign[0]
+    cost0 = t[0, src, a1] + nw[a1] + comp[0] * cinv[a1]
+
+    def step(carry, xs):
+        total, prev = carry
+        l, c_l = xs                      # l in 2..Lmax, layer l at assign[l-1]
+        cur = assign[l - 1]
+        active = l <= num_layers
+        seg = t[l - 1, prev, cur] + jnp.where(cur == prev, 0.0, nw[cur]) \
+            + c_l * cinv[cur]
+        total = jnp.where(active, total + seg, total)
+        prev = jnp.where(active, cur, prev)
+        return (total, prev), None
+
+    (total, last), _ = jax.lax.scan(
+        step, (cost0, a1), (jnp.arange(2, lmax + 1), comp[1:]))
+    t_last = jnp.take(t, num_layers, axis=0)
+    return jnp.minimum(total + t_last[last, dst], INF)
+
+
+@jax.jit
+def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                      src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                      assign: jax.Array) -> ComputeNetwork:
+    """Algorithm 1 line 3: add the routed job's load to the queues.
+
+    q_node[a_l] += c_l for each real layer l; q_link[u, v] += d_l for every
+    hop of the min-cost path carrying layer-l output (l = 0..L, with node_0 =
+    src and node_{L+1} = dst).
+    """
+    v = net.num_nodes
+    w = layer_edge_weights(net, data)           # [Lmax+1, V, V]
+    t = transfer_closure(net, data)
+    lmax = comp.shape[0]
+
+    q_node = net.q_node
+    for_l = jnp.arange(lmax + 1)
+    # endpoints of the layer-l transfer: node_l -> node_{l+1} with node_0 =
+    # src and node_{num_layers+1} = dst; layers beyond num_layers are masked.
+    src32 = jnp.asarray(src, jnp.int32).reshape(1)
+    dst32 = jnp.asarray(dst, jnp.int32)
+    starts = jnp.concatenate([src32, assign]).astype(jnp.int32)   # node_l
+    ends = jnp.concatenate([assign, dst32.reshape(1)]).astype(jnp.int32)
+    ends = jnp.where(for_l == num_layers, dst32, ends)
+
+    q_node = q_node + jnp.zeros_like(q_node).at[assign].add(
+        jnp.where(jnp.arange(lmax) < num_layers, comp, 0.0))
+
+    def add_layer(ql, xs):
+        l, a, b = xs
+        active = l <= num_layers
+        d_l = data[l]
+        hops = reconstruct_path(w[l], t[l], a, b, max_hops=v)
+        us, vs = hops[:, 0], hops[:, 1]
+        valid = (us >= 0) & active & (us != vs)
+        add = jnp.where(valid, d_l, 0.0)
+        ql = ql.at[jnp.maximum(us, 0), jnp.maximum(vs, 0)].add(add)
+        return ql, None
+
+    q_link, _ = jax.lax.scan(add_layer, net.q_link, (for_l, starts, ends))
+    return net.with_queues(q_node, q_link)
+
+
+def extract_paths(net: ComputeNetwork, comp, data, src, dst, num_layers, assign):
+    """Host-side helper: explicit per-layer hop lists for the event simulator."""
+    import numpy as np
+    v = net.num_nodes
+    w = jax.device_get(layer_edge_weights(net, data))
+    t = jax.device_get(transfer_closure(net, data))
+    assign = np.asarray(jax.device_get(assign))
+    L = int(num_layers)
+    nodes = [int(src)] + [int(assign[l]) for l in range(L)] + [int(dst)]
+    paths = []
+    for l in range(L + 1):
+        a, b = nodes[l], nodes[l + 1]
+        hops = []
+        cur = a
+        for _ in range(v):
+            if cur == b:
+                break
+            cand = w[l][cur] + t[l][:, b]
+            cand[cur] = np.inf  # never take the zero-cost self-loop
+            nxt = int(np.argmin(cand))
+            hops.append((cur, nxt))
+            cur = nxt
+        paths.append(hops)
+    return paths

@@ -1,0 +1,67 @@
+"""Shortest-path machinery on the physical network, per DNN layer.
+
+For layer l, every intra-layer edge (u, v) of the layered graph costs
+
+    w_l(u, v) = (d_l + Q_uv) / mu_uv        (service + waiting, paper §III-B)
+
+``transfer_closure`` returns the [L+1, V, V] tensor T where T[l, u, v] is the
+cheapest way to move layer-l output from u to v (possibly multi-hop).  It is
+the min-plus closure of w_l, the kernel hot-spot (see kernels/minplus.py).
+
+``reconstruct_hop`` recovers an explicit hop from the closure: from u toward
+v, the next hop is argmin_w  w_l(u, w) + T[l, w, v].  Walking this greedy
+next-hop V-1 times yields a shortest path; it is used to commit link loads in
+the greedy algorithm and to hand explicit paths to the event simulator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .network import INF, ComputeNetwork, link_invrate, link_wait
+
+
+def layer_edge_weights(net: ComputeNetwork, data_sizes: jax.Array) -> jax.Array:
+    """[L+1, V, V] per-layer intra-layer edge weights.
+
+    data_sizes: [L+1] bytes (d_0 .. d_L). Absent edges get INF; the diagonal
+    is 0 (staying put is free).
+    """
+    inv = link_invrate(net)  # [V, V], INF off-graph, 0 diag
+    wait = link_wait(net)    # [V, V], 0 diag
+    w = data_sizes[:, None, None] * inv[None] + wait[None]
+    return jnp.minimum(w, INF)
+
+
+def transfer_closure(net: ComputeNetwork, data_sizes: jax.Array,
+                     *, use_pallas: bool | None = None) -> jax.Array:
+    """[L+1, V, V] min-cost transfer tensor T_l = closure(w_l)."""
+    w = layer_edge_weights(net, data_sizes)
+    return ops.minplus_closure(w, use_pallas=use_pallas)
+
+
+def reconstruct_path(w: jax.Array, t: jax.Array, src: jax.Array, dst: jax.Array,
+                     max_hops: int) -> jax.Array:
+    """Explicit path from src to dst under edge weights w and closure t.
+
+    Returns hops [max_hops, 2] int32 (u, v) pairs, padded with (-1, -1) once
+    dst is reached. jit/vmap friendly (fixed max_hops).
+    """
+
+    def body(carry, _):
+        cur, done = carry
+        # next hop minimizing edge + remaining distance; exclude the zero-cost
+        # self-loop (diagonal) so ties never stall the walk
+        cand = (w[cur] + t[:, dst]).at[cur].set(INF)
+        nxt = jnp.argmin(cand).astype(jnp.int32)
+        arrived = cur == dst
+        hop = jnp.where(done | arrived, -1, 1)
+        u = jnp.where(hop < 0, -1, cur)
+        v = jnp.where(hop < 0, -1, nxt)
+        new_cur = jnp.where(done | arrived, cur, nxt)
+        return (new_cur, done | arrived), jnp.stack([u, v])
+
+    (_, _), hops = jax.lax.scan(
+        body, (src.astype(jnp.int32), jnp.asarray(False)), None, length=max_hops)
+    return hops

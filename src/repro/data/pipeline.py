@@ -1,0 +1,73 @@
+"""Deterministic synthetic data pipeline.
+
+Produces reproducible token streams keyed by (seed, step, shard) so that
+  * restarts resume bit-identically (checkpoint stores only the step),
+  * each data-parallel shard draws a disjoint sub-batch (shard_id/num_shards),
+  * no filesystem or network dependency (offline container).
+
+The "corpus" is a mixture of Zipfian unigrams and short repeated n-gram
+motifs — enough structure that a ~10M-param model's loss visibly drops
+within a few hundred steps (examples/train_smollm.py), while remaining a
+pure function of the key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    motif_prob: float = 0.5
+
+
+def _zipf_probs(cfg: DataConfig) -> np.ndarray:
+    ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+    p = ranks ** (-cfg.zipf_a)
+    return (p / p.sum()).astype(np.float32)
+
+
+class SyntheticStream:
+    """Host-side deterministic batch source (numpy; cheap per step)."""
+
+    def __init__(self, cfg: DataConfig, *, shard_id: int = 0,
+                 num_shards: int = 1):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self._probs = _zipf_probs(cfg)
+
+    def batch_at(self, step: int) -> dict:
+        """The shard's sub-batch for ``step`` (pure function of step)."""
+        cfg = self.cfg
+        b = cfg.global_batch // self.num_shards
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * 97 + self.shard_id)
+        tokens = rng.choice(cfg.vocab_size, size=(b, cfg.seq_len + 1),
+                            p=self._probs).astype(np.int32)
+        # overwrite random spans with repeated motifs (learnable structure)
+        n_motifs = int(cfg.motif_prob * b)
+        for i in range(n_motifs):
+            row = rng.integers(0, b)
+            motif = rng.integers(0, cfg.vocab_size, size=cfg.motif_len)
+            reps = cfg.seq_len // cfg.motif_len
+            tokens[row, : reps * cfg.motif_len] = np.tile(motif, reps)[
+                : reps * cfg.motif_len]
+        return {"tokens": jnp.asarray(tokens[:, :-1]),
+                "labels": jnp.asarray(tokens[:, 1:])}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,194 @@
+"""Parameter / activation sharding rules for the production mesh.
+
+Mesh axes (see launch/mesh.py): single-pod ('data', 'model'); multi-pod
+('pod', 'data', 'model').  Strategy (DESIGN.md §3.4):
+
+  * TP over 'model': attention head / FFN hidden / expert / vocab dims.
+  * FSDP over 'data': the non-TP weight dim (ZeRO-3-style; gathered by
+    GSPMD around use).  Across 'pod' parameters are *replicated* — pure DP
+    with gradient all-reduce over the (slower, DCN-like) pod axis, which the
+    int8 gradient compressor targets.
+  * Activations: batch over ('pod', 'data'); decode KV caches shard heads
+    over 'model' when divisible.
+
+Rules are name-based templates fitted right-aligned to each leaf's shape, so
+stacked [L, ...] / grouped [G, k, ...] block params inherit the rule of their
+trailing dims automatically.  Any template axis that does not divide the
+corresponding dim is dropped (e.g. gemma3's single KV head is replicated
+rather than force-sharded) — the helper guarantees a *legal* spec for every
+architecture in the pool.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "data"
+TP = "model"
+
+# (regex on the param path, right-aligned spec template for trailing dims)
+_RULES: list[tuple[str, tuple]] = [
+    # [V, D] vocab-parallel only: sharding D over 'data' would leak a
+    # D-sharding into the gather output and replicate the batch dim of every
+    # downstream activation (found by the roofline audit; EXPERIMENTS §Perf).
+    (r"embed/tok$", ("model", None)),
+    (r"embed/head$", ("data", "model")),           # [D, V]
+    (r"(wq|wk|wv|w_q|w_q_b)$", ("data", "model")),  # [D, H*hd]
+    (r"(wo|w_out)$", ("model", "data")),           # [H*hd, D]
+    (r"(w_up|w_gate|w_in)$", ("data", "model")),   # [D, F]
+    (r"w_down$", ("model", "data")),               # [F, D]
+    (r"router$", ("data", None)),                  # [D, E] replicated experts dim
+    (r"moe/w_(gate|up)$", ("model", "data", None)),  # [E, D, F] EP over experts
+    (r"moe/w_down$", ("model", None, "data")),     # [E, F, D]
+    (r"(w_kv_a|w_q_a)$", ("data", None)),          # [D, r]
+    (r"(w_uk|w_uv)$", ("model", None, None)),      # [H, r, hd] heads over TP
+    (r"conv_w$", (None, "model")),                 # [dconv, inner+2n]
+    (r"w_[ifo]$", ("data", None)),                 # xlstm gate projections
+    (r"/r$", (None, None, None)),                  # sLSTM recurrent blocks
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit(template: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Right-align the template to ``shape``; drop non-dividing axes."""
+    spec = [None] * len(shape)
+    t = list(template)
+    for i in range(1, min(len(t), len(shape)) + 1):
+        axis = t[-i]
+        dim = shape[-i]
+        if axis is not None and dim % _mesh_axis_size(mesh, axis) == 0:
+            spec[len(shape) - i] = axis
+    return P(*spec)
+
+
+_ATTN_PARAM_RE = r"(wq|wk|wv|wo|w_q$|w_q_a|w_q_b|w_uk|w_uv|w_kv_a)"
+
+
+def _apply_layout(template: tuple, layout: str, name: str = "") -> tuple:
+    """Layout policies.
+
+    '2d' (baseline): TP over 'model' + FSDP over 'data'.
+    'dp_only': no tensor parallelism — FSDP over the combined
+    ('data', 'model') axes, batch over everything.  The right layout for
+    TP-unfriendly small models (few heads; see EXPERIMENTS.md §Perf).
+    """
+    if layout == "2d":
+        return template
+    if layout == "dp_attn":
+        # hybrid: attention projections go data-parallel (TP-hostile when
+        # heads < mesh model size), FFN / vocab keep TP
+        if re.search(_ATTN_PARAM_RE, name):
+            return _apply_layout(template, "dp_only", name)
+        return template
+    if layout == "dp_only":
+        out = []
+        for a in template:
+            if a == "model":
+                out.append(None)
+            elif a == "data":
+                out.append(("data", "model"))
+            else:
+                out.append(a)
+        return tuple(out)
+    raise ValueError(layout)
+
+
+def param_specs(shape_tree: Any, mesh: Mesh, *, layout: str = "2d") -> Any:
+    """PartitionSpec tree matching ``shape_tree`` (a ShapeDtypeStruct tree)."""
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path)
+        for pat, template in _RULES:
+            if re.search(pat, name):
+                return _fit(_apply_layout(template, layout, name), leaf.shape,
+                            mesh)
+        return P()  # norms, scalars, biases: replicate
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, shape_tree)
+
+
+def param_shardings(shape_tree: Any, mesh: Mesh, *, layout: str = "2d") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(shape_tree, mesh, layout=layout))
+
+
+def batch_axes(mesh: Mesh, *, layout: str = "2d"):
+    """Mesh axes the global batch shards over."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if layout == "dp_only":
+        dp = dp + ("model",)
+    return dp
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh, *, layout: str = "2d") -> Any:
+    dp = batch_axes(mesh, layout=layout)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        # drop trailing dp axes until the batch dim divides (e.g. batch 128
+        # on a 512-chip dp_only layout shards over ('data',) only)
+        axes = dp
+        while axes and shape[0] % _mesh_axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+        if axes:
+            return P(axes, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_specs(cache_tree: Any, mesh: Mesh, *, layout: str = "2d") -> Any:
+    """Decode caches: [L, B, T, heads, hd] — batch over dp, heads over TP."""
+    dp = batch_axes(mesh, layout=layout)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            axes = dp  # progressive fallback like batch_specs
+            while axes and shape[1] % _mesh_axis_size(mesh, axes) != 0:
+                axes = axes[:-1]
+            if axes:
+                spec[1] = axes
+        # heads axis (dim 3 of [L,B,T,H,hd]) over TP when divisible
+        if len(shape) == 5 and shape[3] % _mesh_axis_size(mesh, TP) == 0:
+            spec[3] = TP
+        # recurrent states [L,B,H,...]: heads at dim 2
+        if len(shape) in (4, 5) and len(shape) != 5 and \
+                shape[2] % _mesh_axis_size(mesh, TP) == 0:
+            spec[2] = TP
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def opt_state_specs(param_spec_tree: Any, mesh: Mesh) -> Any:
+    """AdamW state: m/v mirror param specs; step is replicated."""
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: tropical (min, +) matrix multiply.
+
+This is the compute hot-spot of the paper's routing framework at scale: the
+all-pairs transfer-cost closures (one per DNN layer, per candidate routing)
+are computed by repeated min-plus squaring, each squaring a V x V x V
+tropical contraction.
+
+TPU adaptation (see DESIGN.md §3.3): the MXU performs multiply-accumulate
+only, so a (min, +) contraction cannot use the systolic array.  It *is*
+however a perfectly regular dense contraction, so the memory-hierarchy
+discipline of a matmul kernel still applies verbatim: stream (bm, bk) /
+(bk, bn) tiles HBM->VMEM, keep a (bm, bn) running-min accumulator in VMEM
+scratch across the K grid dimension, and emit the tile once on the last K
+step.  Inside the tile the contraction is VPU work: bk rank-1 broadcast-adds
+followed by elementwise minimum, with fully aligned (8, 128)-lane shapes when
+bm, bn are multiples of 128.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (sequential on TPU, so the VMEM
+accumulator carries across K steps of the same (i, j) tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, acc_ref, *, bk: int, k_steps: int,
+                    inner_chunk: int):
+    """One (bm, bn) output tile; min-accumulate over the K grid dim."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.float32(3.0e38) / 2)
+
+    a = a_ref[...].astype(jnp.float32)  # [bm, bk]
+    b = b_ref[...].astype(jnp.float32)  # [bk, bn]
+
+    # Contract bk in chunks: each chunk materializes a [bm, chunk, bn]
+    # broadcast-sum in VREGs/VMEM and folds it into the accumulator with a
+    # running min.  chunk is chosen so the intermediate stays ~1 MiB.
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, c * inner_chunk, inner_chunk, 1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, c * inner_chunk, inner_chunk, 0)
+        part = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)  # [bm, bn]
+        return jnp.minimum(acc, part)
+
+    acc = acc_ref[...]
+    acc = jax.lax.fori_loop(0, bk // inner_chunk, body, acc)
+    acc_ref[...] = acc
+
+    @pl.when(k_idx == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "inner_chunk", "interpret"))
+def minplus_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    inner_chunk: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A (min,+) B for 2-D operands whose dims divide the block sizes.
+
+    Shape padding / batching live in :mod:`repro.kernels.ops`; this function
+    is the raw tiled kernel.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+    assert bk % inner_chunk == 0
+    k_steps = k // bk
+
+    kernel = functools.partial(
+        _minplus_kernel, bk=bk, k_steps=k_steps, inner_chunk=inner_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)

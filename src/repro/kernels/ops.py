@@ -1,0 +1,135 @@
+"""jit'd public wrappers around the tropical kernels.
+
+``minplus_matmul`` dispatches to the Pallas kernel when the problem is big
+enough to amortize tiling (and pads to block multiples with +INF, which is
+absorbing for ``min``), otherwise to the pure-jnp oracle.  On CPU the kernel
+runs in interpret mode — the TPU is the target, CPU validates semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .minplus import minplus_matmul_pallas
+
+_PAD = jnp.float32(1e30)
+# Below this dimension the [n, n, n] broadcast oracle is cheaper than tiling.
+_PALLAS_MIN_DIM = 256
+
+
+def _should_use_pallas(m: int, k: int, n: int) -> bool:
+    return min(m, k, n) >= _PALLAS_MIN_DIM
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def minplus_matmul(a: jax.Array, b: jax.Array, *, use_pallas: bool | None = None,
+                   block: int = 128) -> jax.Array:
+    """C[..., i, j] = min_k A[..., i, k] + B[..., k, j].
+
+    Batched operands fall back to the oracle (vmapping the kernel is possible
+    but the routing closures call the 2-D path).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        return ref.minplus_matmul_ref(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    if use_pallas is None:
+        use_pallas = _should_use_pallas(m, k, n)
+    if not use_pallas:
+        return ref.minplus_matmul_ref(a, b)
+
+    pm, pk, pn = (-m) % block, (-k) % block, (-n) % block
+    a_p = jnp.pad(a, ((0, pm), (0, pk)), constant_values=_PAD)
+    b_p = jnp.pad(b, ((0, pk), (0, pn)), constant_values=_PAD)
+    out = minplus_matmul_pallas(
+        a_p, b_p, bm=block, bn=block, bk=block,
+        interpret=_interpret_default())
+    return out[:m, :n]
+
+
+def minplus_matvec(a: jax.Array, x: jax.Array) -> jax.Array:
+    return ref.minplus_matvec_ref(a, x)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def minplus_closure(w: jax.Array, *, use_pallas: bool | None = None) -> jax.Array:
+    """All-pairs shortest-path distances by repeated tropical squaring.
+
+    ``w``: [V, V] (or batched [..., V, V]) edge weights, INF-sentinel for
+    absent edges. Returns D with D[u, u] = 0 and D[u, v] = min-cost path.
+    ``ceil(log2(V-1))`` squarings cover all simple paths.
+    """
+    n = w.shape[-1]
+    eye = jnp.arange(n)
+    d = w.at[..., eye, eye].min(0.0)
+    # After s squarings, d covers all paths of <= 2^s hops; simple paths have
+    # at most n-1 hops, so ceil(log2(n-1)) squarings suffice.
+    steps = max(1, (n - 1).bit_length())
+    if w.ndim == 2:
+        for _ in range(steps):
+            d = minplus_matmul(d, d, use_pallas=use_pallas)
+    else:
+        for _ in range(steps):
+            d = ref.minplus_matmul_ref(d, d)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (kernels/flash.py) with a memory-bounded XLA backward.
+# ---------------------------------------------------------------------------
+
+def _attn_ref_bhsd(q, k, v, scale):
+    """Chunk-free reference math (used under jax.vjp for the backward)."""
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    n = q.shape[1]
+    mask = jnp.arange(n)[:, None] >= jnp.arange(n)[None, :]
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p.astype(q.dtype), v)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(scale: float, bq: int, bk: int, interpret: bool):
+    from .flash import flash_fwd_lse, flash_bwd
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        o, _ = flash_fwd_lse(q, k, v, scale=scale, causal=True,
+                             bq=bq, bk=bk, interpret=interpret)
+        return o
+
+    def fwd(q, k, v):
+        o, lse = flash_fwd_lse(q, k, v, scale=scale, causal=True,
+                               bq=bq, bk=bk, interpret=interpret)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, g):
+        q, k, v, o, lse = res
+        return flash_bwd(q, k, v, o, lse, g, scale=scale, causal=True,
+                         bq=bq, bk=bk, interpret=interpret)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """Causal flash attention on [BH, S, d] operands (see kernels/flash.py).
+
+    Forward runs the Pallas kernel (scores never reach HBM); backward
+    recomputes attention under jax.vjp of the reference math (remat-style).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    bq = min(bq, q.shape[1])
+    bk = min(bk, k.shape[1])
+    return _make_flash(float(scale), int(bq), int(bk), bool(interpret))(
+        q, k, v)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the tropical (min, +) kernels.
+
+These are the semantic references the Pallas kernels are validated against
+(tests sweep shapes/dtypes and assert_allclose kernel vs. oracle).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[i, j] = min_k A[i, k] + B[k, j]   (tropical semiring matmul).
+
+    Supports leading batch dims on both operands (broadcast like matmul).
+    """
+    return jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def minplus_matvec_ref(a: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = min_k A[i, k] + x[k]."""
+    return jnp.min(a + x[..., None, :], axis=-1)
+
+
+def minplus_closure_ref(w: jnp.ndarray, *, num_nodes: int | None = None) -> jnp.ndarray:
+    """All-pairs shortest path distances: the reflexive-transitive min-plus
+    closure of the edge-weight matrix ``w`` (repeated tropical squaring).
+
+    ``w[i, j]`` is the direct edge weight (a large finite INF when absent).
+    The diagonal is forced to 0 before squaring.
+    """
+    n = w.shape[-1] if num_nodes is None else num_nodes
+    eye = jnp.arange(w.shape[-1])
+    d = w.at[..., eye, eye].min(0.0)
+    steps = max(1, int(jnp.ceil(jnp.log2(max(n - 1, 2)))))
+    for _ in range(steps):
+        d = minplus_matmul_ref(d, d)
+    return d

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — JAX
+locks the host device count at first init, and the production meshes need
+512 placeholder devices.  Nothing else in the repo sets this flag (smoke
+tests and benchmarks see the 1 real CPU device).
+
+For every cell this driver:
+  1. builds ShapeDtypeStruct stand-ins for params / optimizer state / batch
+     (never allocating),
+  2. jits the step with explicit NamedShardings from
+     repro.distributed.sharding and ``.lower().compile()``s it,
+  3. records ``compiled.memory_analysis()`` (proves the cell fits),
+     ``compiled.cost_analysis()`` (per-device FLOPs / bytes for §Roofline),
+     and the collective bytes parsed from the optimized HLO,
+  4. writes one JSON per cell under --out.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_135m \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.distributed import sharding as sh
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step, make_serve_step, \
+    make_prefill_step, default_optimizer
+from repro.models import model as M
+
+
+def _struct_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _flash_hidden(cfg, spec, chips: int) -> dict:
+    """Analytic flops/bytes of the shard_map'ed flash-attention kernels.
+
+    pallas_call is a custom call, invisible to cost_analysis; this is the
+    correction §Roofline adds back.  Causal blocking halves the S^2 work;
+    the whole point of the kernel is that HBM traffic is the O(S*d) operand
+    movement, not the O(S^2) scores.
+    """
+    b, s = spec.global_batch, spec.seq_len
+    h = cfg.num_heads
+    if cfg.use_mla:
+        dq = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        dv = cfg.v_head_dim
+    else:
+        dq = dv = cfg.head_dim
+    fwd_flops = 0.5 * 2.0 * b * h * s * s * (dq + dv) * cfg.num_layers
+    mult = 4.0 if spec.kind == "train" else 1.0     # fwd + 3x-fwd backward
+    per_layer_io = b * s * h * (2 * dq + 2 * dv) * 2  # Q,K,V,O bf16
+    io_mult = 3.0 if spec.kind == "train" else 1.0
+    return {
+        "flops_per_device": fwd_flops * mult / chips,
+        "bytes_per_device": per_layer_io * io_mult * cfg.num_layers / chips,
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             opts: dict | None = None) -> dict:
+    """Lower+compile one cell; returns the §Dry-run / §Roofline record."""
+    opts = opts or {}
+    cfg = registry.config(arch)
+    spec = SHAPES[shape]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok"}
+    ok, reason = shape_applicable(cfg, spec)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mod = registry.get(arch)
+    # Unroll layer loops so cost_analysis / the collective audit see every
+    # layer (XLA visits while bodies once).  Time-recurrent scans (ssm /
+    # hybrid prefill+train) necessarily remain loops; those cells get
+    # analytic compute terms in §Roofline (flops_source flags this).
+    layout = opts.get("layout", "2d")
+    knobs = {k: opts[k] for k in
+             ("attn_chunk_q", "remat_policy", "moe_ep_shard", "attn_impl",
+              "gqa_grouped", "moe_local_dispatch")
+             if k in opts}
+    if layout == "dp_only":
+        knobs["dp_axes"] = ("pod", "data", "model")
+    cfg = dataclasses.replace(
+        cfg, scan_layers=bool(opts.get("scan_layers", False)), **knobs)
+    time_scanned = cfg.family in ("ssm", "hybrid") and spec.kind != "decode"
+    rec["flops_source"] = "analytic" if time_scanned else "hlo"
+    rec["opts"] = opts
+    if cfg.attn_impl == "flash" and spec.kind != "decode":
+        rec["flash_hidden"] = _flash_hidden(cfg, spec, 512 if multi_pod
+                                            else 256)
+    batch_struct = mod.input_specs(spec, cfg)
+    params_struct = _struct_tree(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+    p_sharding = sh.param_shardings(params_struct, mesh, layout=layout)
+    b_sharding = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        sh.batch_specs(batch_struct, mesh, layout=layout))
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if spec.kind == "train":
+            opt = default_optimizer(cfg)
+            step = make_train_step(cfg, opt)
+            opt_struct = _struct_tree(opt.init, params_struct)
+            o_sharding = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                sh.opt_state_specs(sh.param_specs(params_struct, mesh), mesh))
+            jitted = jax.jit(step,
+                             in_shardings=(p_sharding, o_sharding, b_sharding),
+                             out_shardings=(jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                                            p_sharding, o_sharding),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_struct, opt_struct, batch_struct)
+        elif spec.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sharding, b_sharding))
+            lowered = jitted.lower(params_struct, batch_struct)
+        else:  # decode
+            step = make_serve_step(cfg)
+            cache_struct = _struct_tree(
+                lambda: M.init_cache(cfg, spec.global_batch, spec.seq_len))
+            c_sharding = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                sh.cache_specs(cache_struct, mesh, layout=layout))
+            jitted = jax.jit(step,
+                             in_shardings=(p_sharding, c_sharding, b_sharding),
+                             out_shardings=(None, c_sharding),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_struct, cache_struct, batch_struct)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params_struct)
+                   if hasattr(x, "size"))
+    rec.update(
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        flops_per_device=cost.get("flops", 0.0),
+        bytes_accessed_per_device=cost.get("bytes accessed", 0.0),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        } if mem else None,
+        collectives=coll,
+        params=n_params,
+        kind=spec.kind,
+        tokens=spec.global_batch * (spec.seq_len if spec.kind != "decode"
+                                    else 1),
+        seq_len=spec.seq_len, global_batch=spec.global_batch,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--opts", default="{}",
+                    help='JSON perf knobs, e.g. \'{"attn_chunk_q": 512, '
+                         '"layout": "dp_only"}\'')
+    args = ap.parse_args()
+    opts = json.loads(args.opts)
+
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}.{shape}.{'multi' if multi else 'single'}"
+                path = outdir / f"{tag}.json"
+                if path.exists():
+                    print(f"[dryrun] {tag}: cached")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi, opts=opts)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                path.write_text(json.dumps(rec, indent=1))
+                print(f"[dryrun] {tag}: {rec['status']} "
+                      f"(lower {rec.get('lower_s', '-')}s, "
+                      f"compile {rec.get('compile_s', '-')}s, "
+                      f"flops/dev {rec.get('flops_per_device', 0):.3g})",
+                      flush=True)
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Parse optimized HLO text for collective traffic (roofline collective term).
+
+``cost_analysis()`` does not expose collective bytes, so we sum the result
+sizes of every collective op in the compiled module.  Each op also gets an
+*effective-bytes* weighting by the standard ring-algorithm factors over its
+replica-group size k:
+
+    all-reduce           2 (k-1)/k      (reduce-scatter + all-gather)
+    all-gather           (k-1)/k
+    reduce-scatter       (k-1)/k
+    all-to-all           (k-1)/k
+    collective-permute   1
+
+Both IotaReplicaGroup (``replica_groups=[G,S]<=...``) and explicit list
+(``replica_groups={{0,1},...}``) syntaxes are parsed.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(result):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _factor(op: str, k: int) -> float:
+    if op == "collective-permute":   # point-to-point: full payload moves
+        return 1.0
+    if k <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (k - 1) / k
+    return (k - 1) / k
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Aggregate collective traffic from optimized HLO text.
+
+    Returns per-op counts/bytes plus ``total_bytes`` (sum of result sizes,
+    per device) and ``effective_bytes`` (ring-factor weighted — the number a
+    per-link bandwidth divides for the roofline collective term).
+    """
+    per_op: dict[str, dict] = {}
+    total = 0
+    effective = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("result"))
+        k = _group_size(line)
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0, "effective_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["effective_bytes"] += nbytes * _factor(op, k)
+        total += nbytes
+        effective += nbytes * _factor(op, k)
+    return {"per_op": per_op, "total_bytes": total,
+            "effective_bytes": effective}

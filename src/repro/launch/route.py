@@ -1,0 +1,85 @@
+"""Paper driver: route DNN inference jobs over the evaluation topologies.
+
+  PYTHONPATH=src python -m repro.launch.route --topology small \
+      --jobs vgg19:2,resnet34:6 --scale 1e-4 --algo both --seed 0
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (annealing, bounds, greedy, jobs as J, network as N,
+                        schedule)
+from repro.configs import registry
+
+
+def build_jobs(spec: str, num_nodes: int, seed: int) -> list[J.InferenceJob]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for part in spec.split(","):
+        name, count = part.split(":")
+        for i in range(int(count)):
+            src, dst = rng.choice(num_nodes, size=2, replace=False)
+            if name in registry.PAPER_MODELS:
+                out.append(registry.get(name).make_job(
+                    f"{name}-{i}", int(src), int(dst)))
+            elif name == "synthetic":
+                out.append(J.synthetic_job(f"syn-{i}", int(src), int(dst),
+                                           num_layers=24, seed=seed + i,
+                                           flops_scale=2e9, bytes_scale=2e6))
+            else:
+                mod = registry.get(name)
+                comp, data = mod.cost_profile(seq_len=2048, batch=1)
+                out.append(J.InferenceJob(f"{name}-{i}", int(src), int(dst),
+                                          comp.astype(np.float32),
+                                          data.astype(np.float32)))
+    return out
+
+
+def run(topology: str, jobs_spec: str, scale: float, algo: str, seed: int,
+        sa_iters_d: float = 0.995, verbose: bool = True) -> dict:
+    net, names = (N.small_topology(capacity_scale=scale) if topology == "small"
+                  else N.us_backbone(capacity_scale=scale))
+    jobs = build_jobs(jobs_spec, net.num_nodes, seed)
+    batch = J.batch_jobs(jobs)
+    out = {"topology": topology, "scale": scale, "J": len(jobs)}
+
+    if algo in ("greedy", "both"):
+        t0 = time.time()
+        sol = greedy.greedy_route(net, batch)
+        out["greedy_s"] = time.time() - t0
+        sim = schedule.simulate(net, batch, sol.assign, sol.order)
+        out["greedy_bound"] = sol.makespan_bound
+        out["greedy_sim"] = sim.makespan
+        if verbose:
+            print(f"[greedy] bound {sol.makespan_bound:.3f}s "
+                  f"sim {sim.makespan:.3f}s ({out['greedy_s']:.2f}s to solve)")
+    if algo in ("sa", "both"):
+        t0 = time.time()
+        sa = annealing.anneal(net, batch, seed=seed, d=sa_iters_d,
+                              num_chains=4)
+        out["sa_s"] = time.time() - t0
+        sim = schedule.simulate(net, batch, sa.assign, sa.priority)
+        out["sa_bound"] = sa.bound
+        out["sa_sim"] = sim.makespan
+        if verbose:
+            print(f"[sa]     bound {sa.bound:.3f}s sim {sim.makespan:.3f}s "
+                  f"({out['sa_s']:.2f}s to solve)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topology", default="small", choices=["small", "us"])
+    ap.add_argument("--jobs", default="vgg19:2,resnet34:6")
+    ap.add_argument("--scale", type=float, default=1e-4)
+    ap.add_argument("--algo", default="both", choices=["greedy", "sa", "both"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(args.topology, args.jobs, args.scale, args.algo, args.seed)
+
+
+if __name__ == "__main__":
+    main()

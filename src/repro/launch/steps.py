@@ -1,0 +1,46 @@
+"""Step-function builders shared by the launcher, dry-run and tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.optim import schedules
+
+
+def default_optimizer(cfg) -> AdamW:
+    if "minicpm" in cfg.name:  # the WSD-schedule arch
+        sched = lambda step: schedules.wsd(
+            step, peak_lr=1e-2, warmup_steps=2000, stable_steps=40_000,
+            decay_steps=5_000)
+    else:
+        sched = lambda step: schedules.warmup_cosine(
+            step, peak_lr=3e-4, warmup_steps=2000, total_steps=100_000)
+    return AdamW(schedule=sched)
+
+
+def make_train_step(cfg, opt: AdamW | None = None):
+    opt = opt or default_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        params, opt_state, info = opt.apply(params, grads, opt_state)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return M.prefill_logits(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, batch):
+        return M.serve_step(cfg, params, cache, batch)
+
+    return serve_step

@@ -1,0 +1,156 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings [B, T_enc, D] straight into the encoder.  The
+encoder is bidirectional (no causal mask), the decoder is causal with
+cross-attention to the encoder output; decode caches decoder self-attn K/V
+and reuses the encoder states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": cm.init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.head_dim, cfg.dtype),
+        "mlp": cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype, gated=False),
+        "ln1": cm.init_norm(ks[2], cfg.d_model, "layernorm", cfg.dtype),
+        "ln2": cm.init_norm(ks[3], cfg.d_model, "layernorm", cfg.dtype),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 6)
+    p = _enc_block_init(key, cfg)
+    p["xattn"] = cm.init_cross_attention(ks[4], cfg.d_model, cfg.num_heads,
+                                         cfg.head_dim, cfg.dtype)
+    p["ln_x"] = cm.init_norm(ks[5], cfg.d_model, "layernorm", cfg.dtype)
+    return p
+
+
+def init(key, cfg):
+    ke, kd, kt = jax.random.split(key, 3)
+    enc = jax.vmap(lambda k: _enc_block_init(k, cfg))(
+        jax.random.split(ke, cfg.num_layers))
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(kd, cfg.dec_layers))
+    return {
+        "enc": enc, "dec": dec,
+        "embed": cm.init_embed(kt, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "ln_enc": cm.init_norm(kt, cfg.d_model, "layernorm", cfg.dtype),
+        "ln_dec": cm.init_norm(kt, cfg.d_model, "layernorm", cfg.dtype),
+    }
+
+
+def _sinusoid(s, d):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def encode(cfg, params, frames, *, remat=True):
+    """frames: [B, T, D] precomputed frame embeddings (conv frontend stub)."""
+    b, t, d = frames.shape
+    h = frames.astype(cfg.dtype) + _sinusoid(t, d).astype(cfg.dtype)[None]
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+
+    def body(h, p):
+        x = cm.apply_norm(p["ln1"], h, "layernorm")
+        full = jnp.ones((1, 1, t, t), bool)
+        q = (x @ p["attn"]["wq"]).reshape(b, t, cfg.num_heads, cfg.head_dim)
+        k = (x @ p["attn"]["wk"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        v = (x @ p["attn"]["wv"]).reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+        out = cm._sdpa(q, k, v, full)
+        h = h + out.reshape(b, t, -1) @ p["attn"]["wo"]
+        h = h + cm.mlp(p["mlp"], cm.apply_norm(p["ln2"], h, "layernorm"),
+                       gated=False, act=jax.nn.gelu)
+        return h, None
+
+    if remat:
+        body = cm.remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["enc"])
+    else:
+        for i in range(cfg.num_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[i], params["enc"]))
+    return cm.apply_norm(params["ln_enc"], h, "layernorm")
+
+
+def _dec_block(cfg, p, h, enc_out, positions, kv_cache=None, cache_pos=None):
+    x = cm.apply_norm(p["ln1"], h, "layernorm")
+    attn_out, new_cache = cm.attention(
+        p["attn"], x, positions, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, use_rope=False,
+        kv_cache=kv_cache, cache_pos=cache_pos)
+    h = h + attn_out
+    x = cm.apply_norm(p["ln_x"], h, "layernorm")
+    h = h + cm.cross_attention(p["xattn"], x, enc_out,
+                               n_heads=cfg.num_heads, head_dim=cfg.head_dim)
+    h = h + cm.mlp(p["mlp"], cm.apply_norm(p["ln2"], h, "layernorm"),
+                   gated=False, act=jax.nn.gelu)
+    return h, new_cache
+
+
+def decode(cfg, params, tokens, enc_out, *, remat=True):
+    b, s = tokens.shape
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    h = h + _sinusoid(s, cfg.d_model).astype(cfg.dtype)[None]
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, p):
+        h, _ = _dec_block(cfg, p, h, enc_out, positions)
+        return h, None
+
+    if remat:
+        body = cm.remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["dec"])
+    else:
+        for i in range(cfg.dec_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[i], params["dec"]))
+    h = cm.apply_norm(params["ln_dec"], h, "layernorm")
+    return cm.unembed(params["embed"], h).astype(jnp.float32)
+
+
+def forward(cfg, params, frames, tokens, *, remat=True):
+    return decode(cfg, params, tokens, encode(cfg, params, frames, remat=remat),
+                  remat=remat)
+
+
+def init_cache(cfg, batch, max_len):
+    shape = (cfg.dec_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def decode_step(cfg, params, cache, tokens, pos, enc_out):
+    b = tokens.shape[0]
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        _sinusoid(cache["k"].shape[2], cfg.d_model), pos, 1, 0).astype(cfg.dtype)[None]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+
+    def body(h, xs):
+        p, layer_cache = xs
+        h, new_cache = _dec_block(cfg, p, h, enc_out, positions,
+                                  kv_cache=layer_cache, cache_pos=pos)
+        return h, new_cache
+
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body, h, (params["dec"], cache))
+    else:
+        outs = []
+        for i in range(cfg.dec_layers):
+            h, nc = body(h, jax.tree.map(lambda x: x[i], (params["dec"], cache)))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = cm.apply_norm(params["ln_dec"], h, "layernorm")
+    return cm.unembed(params["embed"], h[:, -1]).astype(jnp.float32), new_cache

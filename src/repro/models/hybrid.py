@@ -1,0 +1,163 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single shared attention block.
+
+Every ``attn_every`` Mamba2 layers, one *shared-weight* transformer block
+(full attention + MLP) runs; each invocation is a distinct attention
+instance (own KV cache) over shared parameters.  Mamba2 layers are grouped
+[n_groups, attn_every, ...] so the whole model is a scan over groups with an
+inner scan over layers — the shared block's params are closed over.
+
+Simplification vs. the released Zamba2 (noted in DESIGN.md): Zamba2
+alternates two shared blocks and adds per-invocation LoRA deltas; we use one
+shared block without LoRA, which preserves the memory/compute character the
+routing cost profiles and roofline care about.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .ssm import init_mamba2, mamba2_state, _mamba2_step
+
+
+def _shared_block_init(key, cfg):
+    ks = jax.random.split(key, 5)
+    return {
+        "attn": cm.init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.head_dim, cfg.dtype),
+        "mlp": cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype),
+        "ln1": cm.init_norm(ks[2], cfg.d_model, "rmsnorm", cfg.dtype),
+        "ln2": cm.init_norm(ks[3], cfg.d_model, "rmsnorm", cfg.dtype),
+    }
+
+
+def init(key, cfg):
+    kb, ks, ke = jax.random.split(key, 3)
+    assert cfg.num_layers % cfg.attn_every == 0
+    blocks = jax.vmap(lambda k: init_mamba2(k, cfg))(
+        jax.random.split(kb, cfg.num_layers))
+    return {
+        "mamba": blocks,                                # stacked [L, ...]
+        "shared": _shared_block_init(ks, cfg),
+        "embed": cm.init_embed(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+        "ln_f": cm.init_norm(ke, cfg.d_model, "rmsnorm", cfg.dtype),
+    }
+
+
+def _group_params(cfg, params):
+    n_groups = cfg.num_layers // cfg.attn_every
+    return jax.tree.map(
+        lambda x: x.reshape((n_groups, cfg.attn_every) + x.shape[1:]),
+        params["mamba"])
+
+
+def _shared_apply(cfg, p, h, positions, kv_cache=None, cache_pos=None):
+    x = cm.apply_norm(p["ln1"], h, "rmsnorm")
+    attn_out, new_cache = cm.attention(
+        p["attn"], x, positions, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        kv_cache=kv_cache, cache_pos=cache_pos)
+    h = h + attn_out
+    h = h + cm.mlp(p["mlp"], cm.apply_norm(p["ln2"], h, "rmsnorm"))
+    return h, new_cache
+
+
+def forward(cfg, params, tokens, *, remat=True):
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    grouped = _group_params(cfg, params)
+
+    def group_body(h, g_params):
+        h, _ = _shared_apply(cfg, params["shared"], h, positions)
+
+        def layer_body(h_seq, p):
+            st = mamba2_state(cfg, b)
+
+            def time_body(carry, x_t):
+                new_st, out = _mamba2_step(p, carry, x_t, cfg)
+                return new_st, out
+
+            xn = cm.apply_norm(p["ln"], h_seq, "rmsnorm")
+            _, out = jax.lax.scan(time_body, st, jnp.swapaxes(xn, 0, 1))
+            return h_seq + jnp.swapaxes(out, 0, 1), None
+
+        if remat:
+            layer_body = cm.remat_wrap(layer_body, cfg)
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(layer_body, h, g_params)
+        else:
+            for i in range(cfg.attn_every):
+                h, _ = layer_body(h, jax.tree.map(lambda x: x[i], g_params))
+        return h, None
+
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(group_body, h, grouped)
+    else:
+        for g in range(cfg.num_layers // cfg.attn_every):
+            h, _ = group_body(h, jax.tree.map(lambda x: x[g], grouped))
+    h = cm.apply_norm(params["ln_f"], h, "rmsnorm")
+    return cm.unembed(params["embed"], h).astype(jnp.float32)
+
+
+def init_cache(cfg, batch, max_len):
+    n_groups = cfg.num_layers // cfg.attn_every
+    kv = {"k": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cfg.dtype),
+          "v": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads, cfg.head_dim), cfg.dtype)}
+    ssm = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape),
+        mamba2_state(cfg, batch))
+    return {"kv": kv, "ssm": ssm}
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    x = cm.embed(params["embed"], tokens).astype(cfg.dtype)   # [B, 1, D]
+    x = cm.maybe_shard(x, cfg.dp_axes, None, None)
+    grouped = _group_params(cfg, params)
+    n_groups = cfg.num_layers // cfg.attn_every
+    ssm_grouped = jax.tree.map(
+        lambda s: s.reshape((n_groups, cfg.attn_every) + s.shape[1:]),
+        cache["ssm"])
+    positions = jnp.full((1, 1), pos, jnp.int32)
+
+    def group_body(x, xs):
+        g_params, g_kv, g_ssm = xs
+        x, new_kv = _shared_apply(cfg, params["shared"], x, positions,
+                                  kv_cache=g_kv, cache_pos=pos)
+
+        def layer_body(x, xs_l):
+            p, st = xs_l
+            xn = cm.apply_norm(p["ln"], x[:, 0], "rmsnorm")
+            new_st, out = _mamba2_step(p, st, xn, cfg)
+            return x + out[:, None], new_st
+
+        if cfg.scan_layers:
+            x, new_ssm = jax.lax.scan(layer_body, x, (g_params, g_ssm))
+        else:
+            sts = []
+            for i in range(cfg.attn_every):
+                x, st_i = layer_body(
+                    x, jax.tree.map(lambda t: t[i], (g_params, g_ssm)))
+                sts.append(st_i)
+            new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+        return x, (new_kv, new_ssm)
+
+    if cfg.scan_layers:
+        x, (new_kv, new_ssm) = jax.lax.scan(
+            group_body, x, (grouped, cache["kv"], ssm_grouped))
+    else:
+        kvs, ssms = [], []
+        for g in range(cfg.num_layers // cfg.attn_every):
+            xs_g = jax.tree.map(lambda t: t[g],
+                                (grouped, cache["kv"], ssm_grouped))
+            x, (kv_g, ssm_g) = group_body(x, xs_g)
+            kvs.append(kv_g)
+            ssms.append(ssm_g)
+        new_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+        new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *ssms)
+    new_ssm = jax.tree.map(
+        lambda s: s.reshape((cfg.num_layers,) + s.shape[2:]), new_ssm)
+    x = cm.apply_norm(params["ln_f"], x, "rmsnorm")
+    logits = cm.unembed(params["embed"], x[:, -1])
+    return logits.astype(jnp.float32), {"kv": new_kv, "ssm": new_ssm}

@@ -1,0 +1,144 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+K/V are compressed into a ``kv_lora_rank`` latent c_kv plus a single shared
+RoPE key k_rope; per-head K/V are up-projections of the latent.  Prefill /
+training materializes K/V (matmul-dominant, MXU-friendly).  Decode uses the
+*absorbed* form: queries are pulled into the latent space
+(q_eff = q_nope @ W_uk per head) so attention runs directly against the
+cached latents — the KV cache is [B, T, kv_lora + rope_dim] regardless of
+head count, which is the technique's entire point (and a large d_jl saving
+the routing framework sees in the cost profiles).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim
+    qr = cfg.qk_rope_head_dim
+    vd = cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    p = {
+        "w_kv_a": cm.dense_init(ks[1], d, r + qr, cfg.dtype),          # -> c_kv, k_rope
+        "kv_a_norm": cm.init_norm(ks[2], r, "rmsnorm", cfg.dtype),
+        "w_uk": cm.truncated_normal(ks[3], (h, r, qk), cfg.dtype, 1 / math.sqrt(r)),
+        "w_uv": cm.truncated_normal(ks[4], (h, r, vd), cfg.dtype, 1 / math.sqrt(r)),
+        "wo": cm.dense_init(ks[5], h * vd, d, cfg.dtype),
+    }
+    if cfg.q_lora_rank > 0:
+        p["w_q_a"] = cm.dense_init(ks[6], d, cfg.q_lora_rank, cfg.dtype)
+        p["q_a_norm"] = cm.init_norm(ks[0], cfg.q_lora_rank, "rmsnorm", cfg.dtype)
+        p["w_q_b"] = cm.dense_init(ks[7], cfg.q_lora_rank, h * (qk + qr), cfg.dtype)
+    else:
+        p["w_q"] = cm.dense_init(ks[6], d, h * (qk + qr), cfg.dtype)
+    return p
+
+
+def _queries(p, x, cfg):
+    b, s, _ = x.shape
+    h, qk, qr = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "w_q_a" in p:
+        q = cm.apply_norm(p["q_a_norm"], x @ p["w_q_a"], "rmsnorm") @ p["w_q_b"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(b, s, h, qk + qr)
+    return q[..., :qk], q[..., qk:]
+
+
+def _latents(p, x, cfg):
+    r, qr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = x @ p["w_kv_a"]
+    c_kv = cm.apply_norm(p["kv_a_norm"], kv[..., :r], "rmsnorm")
+    k_rope = kv[..., r:]                                       # [B, S, qr]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, positions, cfg, *, kv_cache=None, cache_pos=None):
+    b, s, _ = x.shape
+    h, qk, qr, vd, r = (cfg.num_heads, cfg.qk_nope_head_dim,
+                        cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank)
+    scale = 1.0 / math.sqrt(qk + qr)
+    q_nope, q_rope = _queries(p, x, cfg)
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latents(p, x, cfg)
+    k_rope = cm.apply_rope(k_rope[:, :, None], positions, cfg.rope_theta)[:, :, 0]
+
+    if kv_cache is None:
+        # -- materialized form (prefill / train)
+        k_nope = jnp.einsum("btr,hrk->bthk", c_kv, p["w_uk"])
+        v = jnp.einsum("btr,hrk->bthk", c_kv, p["w_uv"])
+        chunk = cfg.attn_chunk_q
+        if cfg.attn_impl == "flash" and s >= 128:
+            # fold the shared rope key into a standard attention: per head
+            # K_eff = [k_nope, k_rope], Q_eff = [q_nope, q_rope]
+            h_ = cfg.num_heads
+            k_eff = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                          (b, s, h_, qr))], -1)
+            q_eff = jnp.concatenate([q_nope, q_rope], -1)
+            out = cm._flash_bshd(q_eff, k_eff, v, scale=scale)
+        elif chunk > 0 and s % chunk == 0 and s > chunk:
+            # query-chunked: live scores bounded to [B, H, chunk, S]
+            kpos = jnp.arange(s)[None, :]
+
+            def one(i):
+                qn = jax.lax.dynamic_slice_in_dim(q_nope, i * chunk, chunk, 1)
+                qr = jax.lax.dynamic_slice_in_dim(q_rope, i * chunk, chunk, 1)
+                sc = jnp.einsum("bshk,bthk->bhst", qn, k_nope) + \
+                    jnp.einsum("bshk,btk->bhst", qr, k_rope)
+                sc = sc.astype(jnp.float32) * scale
+                qpos = i * chunk + jnp.arange(chunk)[:, None]
+                sc = jnp.where((kpos <= qpos)[None, None], sc,
+                               jnp.float32(-1e30))
+                pr = jax.nn.softmax(sc, -1).astype(x.dtype)
+                return jnp.einsum("bhst,bthk->bshk", pr, v)
+
+            if not cfg.scan_layers:   # dry-run: unroll for exact HLO counts
+                out = jnp.concatenate([one(i) for i in range(s // chunk)], 1)
+            else:
+                out = jax.lax.map(one, jnp.arange(s // chunk))
+                out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, vd)
+        else:
+            # rope term: each head has its own q_rope but all share k_rope
+            scores = jnp.einsum("bshk,bthk->bhst", q_nope, k_nope) + \
+                jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+            scores = (scores.astype(jnp.float32) * scale)
+            mask = cm.causal_mask(s, s)
+            scores = jnp.where(mask, scores, jnp.float32(-1e30))
+            probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+            out = jnp.einsum("bhst,bthk->bshk", probs, v)
+        new_cache = None
+    else:
+        # -- absorbed form (decode): attend in latent space
+        t = kv_cache["c_kv"].shape[1]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype), cache_pos, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k_rope"], k_rope.astype(kv_cache["k_rope"].dtype), cache_pos, 1)
+        q_eff = jnp.einsum("bshk,hrk->bshr", q_nope, p["w_uk"])   # [B,S,H,r]
+        scores = jnp.einsum("bshr,btr->bhst", q_eff, cc.astype(x.dtype)) + \
+            jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(x.dtype))
+        scores = scores.astype(jnp.float32) * scale
+        valid = (jnp.arange(t)[None, :] <= cache_pos + s - 1)[None, None]
+        scores = jnp.where(valid, scores, jnp.float32(-1e30))
+        probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+        lat = jnp.einsum("bhst,btr->bshr", probs, cc.astype(x.dtype))  # [B,S,H,r]
+        out = jnp.einsum("bshr,hrk->bshk", lat, p["w_uv"])
+        new_cache = {"c_kv": cc, "k_rope": cr}
+    return out.reshape(b, s, h * vd) @ p["wo"], new_cache
+
+
+def init_mla_cache(cfg, batch, max_len):
+    return {
+        "c_kv": jnp.zeros((cfg.num_layers, batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+        "k_rope": jnp.zeros((cfg.num_layers, batch, max_len, cfg.qk_rope_head_dim), cfg.dtype),
+    }

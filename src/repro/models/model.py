@@ -1,0 +1,193 @@
+"""Unified model API: one config dataclass + family dispatch.
+
+Every architecture exposes the same four entry points, which is what the
+launcher, dry-run, serving engine and smoke tests program against:
+
+    init_params(cfg, key)                  -> params pytree
+    loss_fn(cfg, params, batch)            -> scalar loss   (train shapes)
+    prefill_logits(cfg, params, batch)     -> [B, S, vocab] (prefill shapes)
+    init_cache(cfg, batch, max_len)        -> decode cache pytree
+    serve_step(cfg, params, cache, batch)  -> (logits [B, vocab], cache)
+
+``batch`` is a dict: 'tokens'/'labels' [B, S] always; 'frames' [B, T, D] for
+the audio stub (whisper), 'patches' [B, P, D] for the vision stub (phi-3v),
+'pos' (scalar) + optionally 'enc_out' during decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from . import transformer, ssm, hybrid, encdec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 => d_model // num_heads
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    rope_theta: float = 1e4
+    # attention pattern
+    sliding_window: int = 0
+    local_global_pattern: int = 0    # gemma3: 6 => 5 local + 1 global
+    # MoE
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_num_shared: int = 0
+    moe_d_ff: int = 0
+    moe_capacity_factor: float = 1.25
+    # MLA
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # SSM / hybrid
+    ssm_state: int = 0
+    mamba_headdim: int = 64
+    mamba_dconv: int = 4
+    attn_every: int = 0
+    # enc-dec / stubs
+    dec_layers: int = 0
+    num_frames: int = 0              # audio stub frontend output length
+    num_patches: int = 0             # vision stub patch count
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # True: lax.scan over stacked layers (compact HLO, fast compile).
+    # False: unrolled python loop — the dry-run uses this so cost_analysis
+    # and the collective audit see every layer (XLA cost analysis visits a
+    # while-loop body exactly once; see EXPERIMENTS.md §Dry-run).
+    scan_layers: bool = True
+    # ---- performance knobs (EXPERIMENTS.md §Perf; defaults = baseline) ----
+    # query-chunked attention: bound the live score tensor to
+    # [B, H, chunk, T] instead of [B, H, S, S] (flash-attention blocking at
+    # the XLA level; the Pallas kernel variant lives in kernels/flash.py).
+    attn_chunk_q: int = 0
+    # remat policy: 'full' (recompute everything) | 'dots' (save matmul
+    # outputs, recompute elementwise only)
+    remat_policy: str = "full"
+    # activation batch-sharding anchor axes (layout policy; dp_only layout
+    # folds 'model' into the batch axes for TP-unfriendly small models)
+    dp_axes: tuple = ("pod", "data")
+    # constrain the MoE dispatch buffer to expert-parallel sharding
+    moe_ep_shard: bool = False
+    # attention implementation for causal prefill/train: 'xla' (einsum
+    # softmax) or 'flash' (Pallas kernel, kernels/flash.py — scores stay in
+    # VMEM; requires full causal attention, i.e. no sliding window)
+    attn_impl: str = "xla"
+    # GQA contraction via grouped einsum (no materialized K/V repeat)
+    gqa_grouped: bool = False
+    # MoE dispatch sorted/bucketed per data shard under shard_map (plain
+    # data-parallel MoE) instead of a global sort GSPMD must all-gather
+    moe_local_dispatch: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return cm.pad_vocab(self.vocab_size)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this config decode at 500k context? (SSM / hybrid families)."""
+        return self.family in ("ssm", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init(key, cfg)
+    if cfg.family == "ssm":
+        return ssm.xlstm_init(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def prefill_logits(cfg: ModelConfig, params, batch) -> jax.Array:
+    tokens = batch["tokens"]
+    if cfg.family in ("dense", "moe"):
+        return transformer.forward(cfg, params, tokens, remat=cfg.remat)
+    if cfg.family == "vlm":
+        return transformer.forward(cfg, params, tokens,
+                                   extra_embeds=batch.get("patches"),
+                                   remat=cfg.remat)
+    if cfg.family == "ssm":
+        return ssm.xlstm_forward(cfg, params, tokens, remat=cfg.remat)
+    if cfg.family == "hybrid":
+        return hybrid.forward(cfg, params, tokens, remat=cfg.remat)
+    if cfg.family == "encdec":
+        return encdec.forward(cfg, params, batch["frames"], tokens, remat=cfg.remat)
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    """Causal-LM cross entropy (labels = next tokens, -1 = masked)."""
+    logits = prefill_logits(cfg, params, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return ssm.xlstm_state(cfg, batch)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def serve_step(cfg: ModelConfig, params, cache, batch):
+    """One decode step: batch = {'tokens': [B,1], 'pos': scalar, ...}."""
+    tokens, pos = batch["tokens"], batch["pos"]
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.decode_step(cfg, params, cache, tokens, pos)
+    if cfg.family == "ssm":
+        return ssm.xlstm_decode_step(cfg, params, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return hybrid.decode_step(cfg, params, cache, tokens, pos)
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, params, cache, tokens, pos, batch["enc_out"])
+    raise ValueError(cfg.family)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(cfg: ModelConfig, params) -> int:
+    """Params touched per token (MoE counts top-k + shared experts only)."""
+    total = param_count(params)
+    if cfg.moe_num_experts <= 0:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = cfg.num_layers * cfg.moe_num_experts * per_expert
+    routed_active = cfg.num_layers * cfg.moe_top_k * per_expert
+    return total - routed_total + routed_active

@@ -1,0 +1,278 @@
+"""Recurrent families: xLSTM (sLSTM + mLSTM blocks) and Mamba2 (SSD).
+
+All recurrences are ``lax.scan`` over time with explicit, exponentially
+stabilized gates (log-space max-stabilizer m_t), so a single step doubles as
+the decode step with O(1) state — which is why these archs run the
+``long_500k`` shape that full-attention models cannot.
+
+State conventions (per layer, stacked [L, ...] like the transformer blocks):
+  mLSTM: C [B,H,hd,hd] matrix memory, n [B,H,hd] normalizer, m [B,H] stabilizer
+  sLSTM: c/n [B,H,hd] scalar memory, m [B,H,hd]
+  mamba2: h [B,H,P,N] state, conv tail [B,d_conv-1,conv_dim]
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": cm.dense_init(ks[0], d, d, cfg.dtype),
+        "wk": cm.dense_init(ks[1], d, d, cfg.dtype),
+        "wv": cm.dense_init(ks[2], d, d, cfg.dtype),
+        "w_i": cm.dense_init(ks[3], d, h, cfg.dtype),
+        "w_f": cm.dense_init(ks[4], d, h, cfg.dtype),
+        "w_o": cm.dense_init(ks[5], d, d, cfg.dtype),
+        "w_out": cm.dense_init(ks[6], d, d, cfg.dtype),
+        "ln": cm.init_norm(ks[7], d, "rmsnorm", cfg.dtype),
+    }
+
+
+def mlstm_state(cfg, batch):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(p, state, x_t, cfg):
+    """x_t: [B, D] -> (new_state, h_t [B, D])."""
+    b, d = x_t.shape
+    h = cfg.num_heads
+    hd = d // h
+    q = (x_t @ p["wq"]).reshape(b, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (x_t @ p["wk"]).reshape(b, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (x_t @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    log_i = (x_t @ p["w_i"]).astype(jnp.float32)               # [B, H]
+    log_f = jax.nn.log_sigmoid((x_t @ p["w_f"]).astype(jnp.float32))
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] + i_s[..., None, None] * (
+        v[..., :, None] * k[..., None, :])                    # [B,H,hd,hd]
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)), 1.0)
+    h_t = (num / den[..., None]).reshape(b, d)
+    o = jax.nn.sigmoid((x_t @ p["w_o"]).astype(jnp.float32))
+    out = (o * h_t).astype(cfg.dtype) @ p["w_out"]
+    return {"C": C, "n": n, "m": m_new}, out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": cm.dense_init(ks[0], d, 4 * d, cfg.dtype),     # i, f, z, o pre-acts
+        "r": cm.truncated_normal(ks[1], (h, hd, 4 * hd), cfg.dtype,
+                                 1.0 / math.sqrt(hd)),         # recurrent (block-diag)
+        "w_out": cm.dense_init(ks[2], d, d, cfg.dtype),
+        "ln": cm.init_norm(ks[3], d, "rmsnorm", cfg.dtype),
+    }
+
+
+def slstm_state(cfg, batch):
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    return {
+        "c": jnp.zeros((batch, h, hd), jnp.float32),
+        "n": jnp.ones((batch, h, hd), jnp.float32),
+        "m": jnp.zeros((batch, h, hd), jnp.float32),
+        "h": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+def _slstm_step(p, state, x_t, cfg):
+    b, d = x_t.shape
+    h = cfg.num_heads
+    hd = d // h
+    pre = (x_t @ p["w_in"]).reshape(b, h, 4 * hd).astype(jnp.float32)
+    rec = jnp.einsum("bhi,hij->bhj", state["h"], p["r"].astype(jnp.float32))
+    pre = pre + rec
+    log_i, log_f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(log_f_raw)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(z_raw)
+    n = f_s * state["n"] + i_s
+    h_t = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    out = h_t.reshape(b, d).astype(cfg.dtype) @ p["w_out"]
+    return {"c": c, "n": n, "m": m_new, "h": h_t}, out
+
+
+# ---------------------------------------------------------------------------
+# xLSTM model (alternating sLSTM / mLSTM blocks)
+# ---------------------------------------------------------------------------
+
+def xlstm_init(key, cfg):
+    kb, ke = jax.random.split(key)
+    keys = jax.random.split(kb, cfg.num_layers)
+    # Uniform param structure across the scan: every block carries both
+    # parameter sets; the scanned flag selects which path runs.
+    def blk(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"m": init_mlstm(k1, cfg), "s": init_slstm(k2, cfg),
+                "ln": cm.init_norm(k3, cfg.d_model, "rmsnorm", cfg.dtype)}
+    blocks = jax.vmap(blk)(keys)
+    return {"blocks": blocks,
+            "embed": cm.init_embed(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype),
+            "ln_f": cm.init_norm(ke, cfg.d_model, "rmsnorm", cfg.dtype)}
+
+
+def xlstm_state(cfg, batch):
+    L = cfg.num_layers
+    tile = lambda tree: jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), tree)
+    return {"m": tile(mlstm_state(cfg, batch)), "s": tile(slstm_state(cfg, batch))}
+
+
+def _xlstm_block(p, is_mlstm, state, x_t, cfg):
+    xn = cm.apply_norm(p["ln"], x_t, "rmsnorm")
+    new_m, out_m = _mlstm_step(p["m"], state["m"], xn, cfg)
+    new_s, out_s = _slstm_step(p["s"], state["s"], xn, cfg)
+    out = jnp.where(is_mlstm, out_m, out_s)
+    sel = lambda a, b: jax.tree.map(
+        lambda u, v: jnp.where(is_mlstm, u, v), a, b)
+    return {"m": sel(new_m, state["m"]), "s": sel(state["s"], new_s)}, x_t + out
+
+
+def xlstm_scan_tokens(cfg, params, h_seq):
+    """h_seq: [B, S, D] embeddings -> ([B, S, D] outputs, final state).
+
+    Layer-major scan: for each layer, scan over time (keeps state shapes
+    static and the HLO compact: scan-in-scan).
+    """
+    flags = (jnp.arange(cfg.num_layers) % 2 == 0)  # even = mLSTM
+    states = xlstm_state(cfg, h_seq.shape[0])      # stacked [L, ...] zeros
+
+    def layer_body(h_seq, xs):
+        p, flag, st = xs
+
+        def time_body(carry, x_t):
+            new_st, out = _xlstm_block(p, flag, carry, x_t, cfg)
+            return new_st, out
+
+        st_f, out_seq = jax.lax.scan(time_body, st, jnp.swapaxes(h_seq, 0, 1))
+        return jnp.swapaxes(out_seq, 0, 1), st_f
+
+    if cfg.scan_layers:
+        h, final_states = jax.lax.scan(layer_body, h_seq,
+                                       (params["blocks"], flags, states))
+    else:
+        h, outs = h_seq, []
+        for i in range(cfg.num_layers):
+            h, st_i = layer_body(
+                h, jax.tree.map(lambda x: x[i], (params["blocks"], flags, states)))
+            outs.append(st_i)
+        final_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, final_states
+
+
+def xlstm_forward(cfg, params, tokens, *, remat=True):
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    h, _ = xlstm_scan_tokens(cfg, params, h)
+    h = cm.apply_norm(params["ln_f"], h, "rmsnorm")
+    return cm.unembed(params["embed"], h).astype(jnp.float32)
+
+
+def xlstm_decode_step(cfg, params, state, tokens, pos):
+    """tokens: [B, 1] -> (logits [B, vocab], new state)."""
+    x = cm.embed(params["embed"], tokens[:, 0]).astype(cfg.dtype)
+    x = cm.maybe_shard(x, cfg.dp_axes, None)
+    flags = (jnp.arange(cfg.num_layers) % 2 == 0)
+
+    def body(x, xs):
+        p, flag, st = xs
+        new_st, out = _xlstm_block(p, flag, st, x, cfg)
+        return out, new_st
+
+    if cfg.scan_layers:
+        x, new_state = jax.lax.scan(body, x, (params["blocks"], flags, state))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            x, st_i = body(x, jax.tree.map(lambda t: t[i],
+                                           (params["blocks"], flags, state)))
+            outs.append(st_i)
+        new_state = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x = cm.apply_norm(params["ln_f"], x, "rmsnorm")
+    return cm.unembed(params["embed"], x).astype(jnp.float32), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar A per head)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    n = cfg.ssm_state
+    p_dim = cfg.mamba_headdim
+    inner = h * p_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": cm.dense_init(ks[0], d, 2 * inner + 2 * n + h, cfg.dtype),
+        "conv_w": cm.truncated_normal(ks[1], (cfg.mamba_dconv, inner + 2 * n),
+                                      cfg.dtype, 0.1),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": cm.dense_init(ks[2], inner, d, cfg.dtype),
+        "ln": cm.init_norm(ks[3], d, "rmsnorm", cfg.dtype),
+    }
+
+
+def mamba2_state(cfg, batch):
+    h, n, p_dim = cfg.num_heads, cfg.ssm_state, cfg.mamba_headdim
+    inner = h * p_dim
+    return {
+        "h": jnp.zeros((batch, h, p_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_dconv - 1, inner + 2 * n), jnp.float32),
+    }
+
+
+def _mamba2_step(p, state, x_t, cfg):
+    """Single-token SSD recurrence. x_t: [B, D]."""
+    b, d = x_t.shape
+    h, n, p_dim = cfg.num_heads, cfg.ssm_state, cfg.mamba_headdim
+    inner = h * p_dim
+    zxbcdt = x_t @ p["w_in"]                     # [B, 2*inner + 2n + h]
+    z = zxbcdt[:, :inner]
+    xbc = zxbcdt[:, inner:2 * inner + 2 * n]     # (x, B, C) pre-conv
+    dt_raw = zxbcdt[:, 2 * inner + 2 * n:]       # [B, H]
+    # causal depthwise conv over (x, B, C) with carried tail
+    conv_in = jnp.concatenate([state["conv"], xbc[:, None, :].astype(jnp.float32)], 1)
+    w = p["conv_w"].astype(jnp.float32)                        # [dconv, inner+2n]
+    xbc_c = jax.nn.silu(jnp.einsum("btc,tc->bc", conv_in, w))
+    new_conv = conv_in[:, 1:]
+    x_in = xbc_c[:, :inner].reshape(b, h, p_dim)
+    B_in = xbc_c[:, inner:inner + n]                           # [B, N]
+    C_in = xbc_c[:, inner + n:]                                # [B, N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    a = jnp.exp(-jnp.exp(p["a_log"])[None] * dt)               # [B, H]
+    dx = dt[..., None] * x_in                                  # [B, H, P]
+    hs = a[..., None, None] * state["h"] + dx[..., None] * B_in[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", hs, C_in) + p["d_skip"][None, :, None] * x_in
+    y = (y.reshape(b, inner) * jax.nn.silu(z.astype(jnp.float32))).astype(cfg.dtype)
+    return {"h": hs, "conv": new_conv}, y @ p["w_out"]

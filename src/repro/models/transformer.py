@@ -1,0 +1,207 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA families.
+
+One implementation parameterized by :class:`~repro.models.model.ModelConfig`:
+  * dense llama-style blocks (olmo-1b, smollm-135m, minicpm-2b, phi-3 backbone)
+  * gemma3-style 5:1 local:global sliding-window attention
+  * MoE blocks with shared + routed experts, top-k token-choice routing with
+    static capacity (olmoe-1b-7b, deepseek-v2-236b)
+  * MLA (multi-head latent attention) with absorbed-form decode (deepseek-v2)
+
+Blocks are stacked [L, ...] and scanned; per-layer heterogeneity (local vs
+global attention, dense vs MoE) rides along as scanned flag vectors.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from .moe import init_moe, moe_block
+from .mla import init_mla, mla_attention, init_mla_cache
+
+
+def _block_init(key, cfg):
+    ks = jax.random.split(key, 8)
+    p = {}
+    hd = cfg.head_dim
+    if cfg.use_mla:
+        p["attn"] = init_mla(ks[0], cfg)
+    else:
+        p["attn"] = cm.init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                      cfg.num_kv_heads, hd, cfg.dtype)
+    p["ln1"] = cm.init_norm(ks[1], cfg.d_model, cfg.norm, cfg.dtype)
+    p["ln2"] = cm.init_norm(ks[2], cfg.d_model, cfg.norm, cfg.dtype)
+    if cfg.moe_num_experts > 0:
+        p["moe"] = init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = cm.init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init(key, cfg):
+    kb, ke = jax.random.split(key)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(
+        jax.random.split(kb, cfg.num_layers))
+    params = {
+        "blocks": blocks,
+        "embed": cm.init_embed(ke, cfg.padded_vocab, cfg.d_model, cfg.dtype,
+                               tie=cfg.tie_embeddings),
+        "ln_f": cm.init_norm(ke, cfg.d_model, cfg.norm, cfg.dtype),
+    }
+    return params
+
+
+def _layer_windows(cfg):
+    """[L] per-layer attention window (0 = full/global)."""
+    if cfg.local_global_pattern <= 0:
+        return jnp.full((cfg.num_layers,), cfg.sliding_window, jnp.int32)
+    # gemma3: (pattern-1) local layers then 1 global, repeating
+    l = jnp.arange(cfg.num_layers)
+    is_global = (l % cfg.local_global_pattern) == (cfg.local_global_pattern - 1)
+    return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+
+
+def _block_apply(cfg, p, h, positions, window, kv_cache=None, cache_pos=None):
+    x = cm.apply_norm(p["ln1"], h, cfg.norm)
+    if cfg.use_mla:
+        attn_out, new_cache = mla_attention(p["attn"], x, positions, cfg,
+                                            kv_cache=kv_cache, cache_pos=cache_pos)
+    else:
+        # window is a traced per-layer scalar; full attention applies a
+        # windowed mask only when static sliding_window > 0 for this config.
+        win = cfg.sliding_window if cfg.local_global_pattern <= 0 \
+            else None  # dynamic: handled via mask select below
+        if win is None:
+            # build both masks, select by the scanned flag (compiles to one
+            # fused select; avoids retracing per layer)
+            attn_out, new_cache = _dyn_window_attention(
+                cfg, p["attn"], x, positions, window, kv_cache, cache_pos)
+        else:
+            attn_out, new_cache = cm.attention(
+                p["attn"], x, positions, n_heads=cfg.num_heads,
+                n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, window=win,
+                kv_cache=kv_cache, cache_pos=cache_pos,
+                chunk_q=cfg.attn_chunk_q, unroll_chunks=not cfg.scan_layers,
+                attn_impl=cfg.attn_impl, grouped=cfg.gqa_grouped)
+    h = h + attn_out
+    x = cm.apply_norm(p["ln2"], h, cfg.norm)
+    if cfg.moe_num_experts > 0:
+        h = h + moe_block(p["moe"], x, cfg)
+    else:
+        h = h + cm.mlp(p["mlp"], x)
+    return h, new_cache
+
+
+def _dyn_window_attention(cfg, p, x, positions, window, kv_cache, cache_pos):
+    """Attention whose sliding window is a traced per-layer scalar.
+
+    The mask is built dynamically: key positions within ``window`` of the
+    query when window > 0, unrestricted otherwise.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        if cfg.attn_chunk_q > 0 and s % cfg.attn_chunk_q == 0 \
+                and s > cfg.attn_chunk_q:
+            out = cm._sdpa_chunked(q, k, v, window=window,
+                                   chunk=cfg.attn_chunk_q,
+                                   unroll=not cfg.scan_layers)
+        else:
+            qpos = jnp.arange(s)[:, None]
+            kpos = jnp.arange(s)[None, :]
+            mask = kpos <= qpos
+            mask &= (window <= 0) | (kpos > qpos - window)
+            out = cm._sdpa(q, k, v, mask[None, None])
+        new_cache = None
+    else:
+        t = kv_cache["k"].shape[1]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), cache_pos, axis=1)
+        kpos = jnp.arange(t)[None, :]
+        valid = kpos <= (cache_pos + s - 1)
+        valid &= (window <= 0) | (kpos > cache_pos + s - 1 - window)
+        out = cm._sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                       valid[None, None], grouped=cfg.gqa_grouped)
+        new_cache = {"k": ck, "v": cv}
+    return out.reshape(b, s, cfg.num_heads * hd) @ p["wo"], new_cache
+
+
+def forward(cfg, params, tokens, *, extra_embeds=None, remat=True):
+    """tokens: [B, S] -> logits [B, S, vocab].
+
+    ``extra_embeds`` ([B, P, D]) are prepended (phi-3-vision patch stubs);
+    logits for those positions are discarded.
+    """
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    n_extra = 0
+    if extra_embeds is not None:
+        n_extra = extra_embeds.shape[1]
+        h = jnp.concatenate([extra_embeds.astype(cfg.dtype), h], axis=1)
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    positions = jnp.arange(h.shape[1])[None, :]
+    windows = _layer_windows(cfg)
+
+    def body(h, xs):
+        p, w = xs
+        h, _ = _block_apply(cfg, p, h, positions, w)
+        return h, None
+
+    if remat:
+        body = cm.remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, (params["blocks"], windows))
+    else:
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda x: x[i], params["blocks"])
+            h, _ = body(h, (p_i, windows[i]))
+    h = cm.apply_norm(params["ln_f"], h, cfg.norm)
+    if n_extra:
+        h = h[:, n_extra:]
+    logits = cm.unembed(params["embed"], h)
+    return logits.astype(jnp.float32)
+
+
+def init_cache(cfg, batch, max_len):
+    """Stacked per-layer KV cache pytree (latent cache for MLA)."""
+    if cfg.use_mla:
+        return init_mla_cache(cfg, batch, max_len)
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    """tokens: [B, 1]; pos: scalar int32 — returns (logits [B, vocab], cache)."""
+    h = cm.embed(params["embed"], tokens).astype(cfg.dtype)
+    h = cm.maybe_shard(h, cfg.dp_axes, None, None)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    windows = _layer_windows(cfg)
+
+    def body(h, xs):
+        p, w, layer_cache = xs
+        h, new_cache = _block_apply(cfg, p, h, positions, w,
+                                    kv_cache=layer_cache, cache_pos=pos)
+        return h, new_cache
+
+    if cfg.scan_layers:
+        h, new_cache = jax.lax.scan(body, h, (params["blocks"], windows, cache))
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            p_i = jax.tree.map(lambda x: x[i], params["blocks"])
+            c_i = jax.tree.map(lambda x: x[i], cache)
+            h, nc = body(h, (p_i, windows[i], c_i))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = cm.apply_norm(params["ln_f"], h, cfg.norm)
+    logits = cm.unembed(params["embed"], h[:, -1])
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,28 @@
+"""LR schedules: linear warmup + {cosine, WSD}.
+
+WSD (warmup-stable-decay) is the MiniCPM schedule the minicpm-2b config
+trains with: warmup to peak, hold stable, then a short 1-sqrt/exp decay tail.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr, warmup_steps, stable_steps, decay_steps,
+        min_ratio=0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay_start = warmup_steps + stable_steps
+    prog = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * (min_ratio ** prog)        # exponential decay tail
+    out = jnp.where(step < warmup_steps, warm, peak_lr)
+    return jnp.where(step >= decay_start, decay, out)

@@ -1,0 +1,98 @@
+"""Routing-integrated serving scheduler — the paper's technique, deployed.
+
+A serving cluster (TPU slices + edge ingress points + interconnect) is
+modeled as the paper's computing network: slice i becomes node i with
+``mu_u`` = achievable FLOP/s, interconnect hops become links with ``mu_uv``
+bytes/s, and the per-slice backlog of already-scheduled work is exactly the
+queue vector Q the formulation charges waiting time against.
+
+Every batch of inference requests is turned into InferenceJobs via the
+architecture cost profiles (configs/<arch>.cost_profile) and placed with
+Algorithm 1 (greedy): each request gets (a) the nodes computing each layer
+range — i.e. a layer-wise model split when transfers are cheap relative to
+queueing, or a single fast node when they are not — and (b) a priority.
+
+Straggler mitigation falls out of the formulation: a slow or overloaded
+slice has a long queue (or degraded mu_u after ``report_slowdown``), so its
+waiting term grows and new jobs route around it — tests/test_serving.py
+asserts this end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import greedy, jobs as J, network as N
+from repro.configs import registry
+
+
+@dataclasses.dataclass
+class Placement:
+    job_name: str
+    priority: int
+    assign: np.ndarray          # [L] node per layer
+    bound_s: float              # completion-time upper bound
+
+    @property
+    def nodes_used(self) -> list[int]:
+        seen = []
+        for n in self.assign:
+            if not seen or seen[-1] != n:
+                seen.append(int(n))
+        return seen
+
+
+@dataclasses.dataclass
+class Request:
+    arch: str
+    src: int
+    dst: int
+    seq_len: int = 2048
+    batch: int = 1
+    name: str = ""
+
+
+class RoutedScheduler:
+    def __init__(self, net: N.ComputeNetwork):
+        self.base_net = net
+        self.net = net
+        self._slowdown = np.ones((net.num_nodes,), np.float32)
+
+    # -- cluster health -----------------------------------------------------
+    def report_slowdown(self, node: int, factor: float) -> None:
+        """Straggling slice: effective mu_u /= factor from now on."""
+        self._slowdown[node] = factor
+
+    def drain(self) -> None:
+        """All scheduled work finished: reset queues."""
+        self.net = self.net.reset_queues()
+
+    def _effective_net(self) -> N.ComputeNetwork:
+        import jax.numpy as jnp
+        mu = self.base_net.mu_node / jnp.asarray(self._slowdown)
+        return dataclasses.replace(self.net, mu_node=mu)
+
+    # -- placement ----------------------------------------------------------
+    def schedule(self, requests: list[Request]) -> list[Placement]:
+        infer_jobs = []
+        for i, r in enumerate(requests):
+            mod = registry.get(r.arch)
+            if r.arch in registry.PAPER_MODELS:
+                comp, data = mod.cost_profile(batch=r.batch)
+            else:
+                comp, data = mod.cost_profile(seq_len=r.seq_len, batch=r.batch)
+            infer_jobs.append(J.InferenceJob(
+                r.name or f"req{i}", r.src, r.dst,
+                comp.astype(np.float32), data.astype(np.float32)))
+        batch = J.batch_jobs(infer_jobs)
+        sol = greedy.greedy_route(self._effective_net(), batch)
+        self.net = dataclasses.replace(
+            self.net, q_node=sol.net.q_node, q_link=sol.net.q_link)
+        out = []
+        for p, j in enumerate(sol.order):
+            L = infer_jobs[j].num_layers
+            out.append(Placement(
+                job_name=infer_jobs[j].name, priority=p,
+                assign=sol.assign[j][:L], bound_s=float(sol.bounds[j])))
+        return sorted(out, key=lambda x: x.priority)

@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import jobs as J, network as N, greedy, schedule
+from repro.costs.convnets import vgg19_profile, resnet34_profile
+from repro.costs.lm import cost_profile as lm_cost_profile
+
+
+def test_cost_profiles_match_literature():
+    comp_v, data_v = vgg19_profile()
+    assert len(comp_v) == 19 and len(data_v) == 20
+    assert 3.7e10 < comp_v.sum() < 4.1e10       # VGG19 ~39 GFLOP
+    comp_r, data_r = resnet34_profile()
+    assert len(comp_r) == 34
+    assert 6.5e9 < comp_r.sum() < 8.0e9         # ResNet34 ~7.3 GFLOP
+    assert data_v[0] == 224 * 224 * 3 * 4
+
+
+def test_lm_cost_profile_consistency():
+    cfg = registry.config("olmo_1b")
+    comp, data = lm_cost_profile(cfg, seq_len=2048, batch=1)
+    assert len(comp) == cfg.num_layers + 2
+    assert len(data) == len(comp) + 1
+    # forward flops approximately 2 * params * tokens
+    assert 0.5 < comp.sum() / (2 * 1.18e9 * 2048) < 2.0
+    # MLA arch moves less data per layer than an equivalent dense stack
+    ds = registry.config("deepseek_v2_236b")
+    comp_d, data_d = lm_cost_profile(ds, seq_len=2048, batch=1)
+    assert data_d[1] == 2048 * ds.d_model * 2
+
+
+def test_paper_small_topology_end_to_end():
+    """The paper's §V small-topology experiment: 2 VGG19 + 6 ResNet34."""
+    rng = np.random.default_rng(0)
+    net, names = N.small_topology(capacity_scale=1e-4)
+    jobs = []
+    for i in range(2):
+        s, d = rng.choice(5, 2, replace=False)
+        jobs.append(registry.get("vgg19").make_job(f"v{i}", int(s), int(d)))
+    for i in range(6):
+        s, d = rng.choice(5, 2, replace=False)
+        jobs.append(registry.get("resnet34").make_job(f"r{i}", int(s), int(d)))
+    batch = J.batch_jobs(jobs)
+    sol = greedy.greedy_route(net, batch)
+    assert np.isfinite(sol.makespan_bound) and sol.makespan_bound < 1e4
+    sim = schedule.simulate(net, batch, sol.assign, sol.order)
+    assert sim.makespan <= sol.makespan_bound * (1 + 1e-6)
+
+
+def test_high_link_capacity_concentrates_jobs():
+    """§V observation: with large link capacities greedy assigns all layers
+    of a job to a single (fast) node."""
+    net, _ = N.small_topology(capacity_scale=1e3)   # effectively free links
+    job = registry.get("vgg19").make_job("v", 0, 4)
+    batch = J.batch_jobs([job])
+    sol = greedy.greedy_route(net, batch)
+    L = job.num_layers
+    nodes = set(int(x) for x in sol.assign[0][:L])
+    assert len(nodes) == 1, f"expected single-node assignment, got {nodes}"
+    assert nodes == {0}  # node s has the largest capacity (200 GF/s)
+
+
+def test_low_link_capacity_splits_jobs():
+    """With expensive links, computation stays near the source/dest path."""
+    net, _ = N.small_topology(capacity_scale=1e-5)
+    job = registry.get("vgg19").make_job("v", 0, 4)
+    batch = J.batch_jobs([job])
+    sol = greedy.greedy_route(net, batch)
+    sim = schedule.simulate(net, batch, sol.assign, sol.order)
+    assert sim.makespan <= sol.makespan_bound * (1 + 1e-6)
+
+
+def test_completion_decreases_with_link_capacity():
+    """Fig. 5 trend: completion time falls as link capacity scales up."""
+    rng = np.random.default_rng(1)
+    jobs = []
+    for i in range(4):
+        s, d = rng.choice(5, 2, replace=False)
+        name = "vgg19" if i < 2 else "resnet34"
+        jobs.append(registry.get(name).make_job(f"{name}-{i}", int(s), int(d)))
+    prev = None
+    for scale in [1e-4, 1e-3, 1e-2, 1e-1]:
+        net, _ = N.small_topology(capacity_scale=scale)
+        sol = greedy.greedy_route(net, J.batch_jobs(jobs))
+        if prev is not None:
+            assert sol.makespan_bound <= prev * (1 + 1e-5)
+        prev = sol.makespan_bound
+
+
+def test_us_backbone_runs():
+    net, names = N.us_backbone(capacity_scale=1e-2)
+    assert net.num_nodes == 24
+    caps = np.asarray(net.mu_node) / 1e9
+    np.testing.assert_allclose(caps[:5], [30, 50, 200, 100, 70], rtol=1e-6)
+    job = registry.get("resnet34").make_job("r", 0, 23)
+    sol = greedy.greedy_route(net, J.batch_jobs([job]))
+    assert np.isfinite(sol.makespan_bound)

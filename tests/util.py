@@ -1,0 +1,40 @@
+"""Shared test helpers: fixed-shape random routing instances."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import jobs as J, network as N
+
+V = 6       # fixed sizes keep jit caches warm across hypothesis examples
+LMAX = 4
+
+
+def random_instance(rng: np.random.Generator, *, num_jobs: int = 1,
+                    with_queues: bool = False):
+    """Connected random network + random jobs (fixed V / Lmax shapes)."""
+    # ring + random chords => always connected
+    edges = [(i, (i + 1) % V, float(rng.uniform(0.5, 5.0))) for i in range(V)]
+    for _ in range(rng.integers(0, 5)):
+        u, v = rng.choice(V, 2, replace=False)
+        edges.append((int(u), int(v), float(rng.uniform(0.5, 5.0))))
+    caps = rng.uniform(0.0, 4.0, V)
+    caps[caps < 0.8] = 0.0            # some nodes have no compute
+    if (caps > 0).sum() == 0:
+        caps[0] = 2.0
+    net = N.make_network(V, edges, caps.astype(float))
+    if with_queues:
+        qn = rng.uniform(0, 3, V) * (caps > 0)
+        mu = np.asarray(net.mu_link)
+        ql = rng.uniform(0, 3, (V, V)) * (mu > 0)
+        import jax.numpy as jnp
+        net = net.with_queues(jnp.asarray(qn, jnp.float32),
+                              jnp.asarray(ql, jnp.float32))
+    jobs = []
+    for i in range(num_jobs):
+        L = int(rng.integers(1, LMAX + 1))
+        comp = rng.uniform(0.3, 3.0, L).astype(np.float32)
+        data = rng.uniform(0.1, 2.0, L + 1).astype(np.float32)
+        # pad to LMAX via batch_jobs later; keep job at its own length
+        src, dst = rng.choice(V, 2, replace=False)
+        jobs.append(J.InferenceJob(f"job{i}", int(src), int(dst), comp, data))
+    return net, jobs
