@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import greedy, jobs as J, network as N, schedule
+from repro.core import jobs as J, solve
 from .runtime_scaling import synthetic_network, jobs_for
 
 
@@ -13,10 +13,10 @@ def run(verbose: bool = True, n_instances: int = 5) -> dict:
     for seed in range(n_instances):
         net = synthetic_network(16, seed)
         batch = J.batch_jobs(jobs_for(16, 6, seed))
-        sol = greedy.greedy_route(net, batch)
-        sim = schedule.simulate(net, batch, sol.assign, sol.order)
-        assert sim.makespan <= sol.makespan_bound * (1 + 1e-6)
-        ratios.append(sol.makespan_bound / sim.makespan)
+        plan = solve(net, batch, method="greedy")
+        sim = plan.simulate(net, batch)
+        assert sim.makespan <= plan.bound() * (1 + 1e-6)
+        ratios.append(plan.bound() / sim.makespan)
     out = dict(mean_ratio=float(np.mean(ratios)),
                max_ratio=float(np.max(ratios)),
                min_ratio=float(np.min(ratios)))

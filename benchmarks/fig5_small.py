@@ -2,11 +2,9 @@
 5-node topology (2 VGG19 + 6 ResNet34, 5 random src-dst realizations)."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core import annealing, greedy, jobs as J, network as N, schedule
+from repro.core import jobs as J, network as N, solve
 from .common import paper_jobs_small
 
 # (full paper sweep: 6 scales x 5 realizations; trimmed for the
@@ -23,19 +21,15 @@ def run(verbose: bool = True) -> list[dict]:
         for seed in range(REALIZATIONS):
             net, _ = N.small_topology(capacity_scale=scale)
             batch = J.batch_jobs(paper_jobs_small(seed))
-            t0 = time.time()
-            sol = greedy.greedy_route(net, batch)
-            g_time += time.time() - t0
-            g_bounds.append(sol.makespan_bound)
-            g_sims.append(schedule.simulate(net, batch, sol.assign,
-                                            sol.order).makespan)
-            t0 = time.time()
-            sa = annealing.anneal(net, batch, seed=seed, d=0.995,
-                                  num_chains=4, block_move_prob=0.3)
-            s_time += time.time() - t0
-            s_bounds.append(sa.bound)
-            s_sims.append(schedule.simulate(net, batch, sa.assign,
-                                            sa.priority).makespan)
+            sol = solve(net, batch, method="greedy")
+            g_time += sol.meta["solve_s"]
+            g_bounds.append(sol.bound())
+            g_sims.append(sol.simulate(net, batch).makespan)
+            sa = solve(net, batch, method="sa", seed=seed, d=0.995,
+                       num_chains=4, block_move_prob=0.3)
+            s_time += sa.meta["solve_s"]
+            s_bounds.append(sa.bound())
+            s_sims.append(sa.simulate(net, batch).makespan)
         row = dict(scale=scale,
                    greedy_bound=float(np.mean(g_bounds)),
                    greedy_sim=float(np.mean(g_sims)),

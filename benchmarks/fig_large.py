@@ -2,11 +2,9 @@
 (6 VGG19 + 2 ResNet34 + 2 hand-made models)."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro.core import annealing, greedy, jobs as J, network as N, schedule
+from repro.core import jobs as J, network as N, solve
 from .common import paper_jobs_large
 
 SCALES = [1e-4, 1e-2]
@@ -21,17 +19,13 @@ def run(verbose: bool = True) -> list[dict]:
         for seed in range(REALIZATIONS):
             net, _ = N.us_backbone(capacity_scale=scale)
             batch = J.batch_jobs(paper_jobs_large(seed))
-            t0 = time.time()
-            sol = greedy.greedy_route(net, batch)
-            g_time += time.time() - t0
-            g_sims.append(schedule.simulate(net, batch, sol.assign,
-                                            sol.order).makespan)
-            t0 = time.time()
-            sa = annealing.anneal(net, batch, seed=seed, d=0.99,
-                                  num_chains=2, block_move_prob=0.3)
-            s_time += time.time() - t0
-            s_sims.append(schedule.simulate(net, batch, sa.assign,
-                                            sa.priority).makespan)
+            sol = solve(net, batch, method="greedy")
+            g_time += sol.meta["solve_s"]
+            g_sims.append(sol.simulate(net, batch).makespan)
+            sa = solve(net, batch, method="sa", seed=seed, d=0.99,
+                       num_chains=2, block_move_prob=0.3)
+            s_time += sa.meta["solve_s"]
+            s_sims.append(sa.simulate(net, batch).makespan)
         row = dict(scale=scale, greedy_sim=float(np.mean(g_sims)),
                    sa_sim=float(np.mean(s_sims)),
                    greedy_s=g_time / REALIZATIONS,

@@ -34,8 +34,16 @@ def main() -> None:
         results.append((name, dt * 1e6, derive(rows)))
 
     from . import bound_gap, fig5_small, fig_large, kernel_bench, \
-        roofline, runtime_scaling
+        roofline, runtime_scaling, solver_compare
 
+    def _solver_ratio(rows):
+        by = {r["method"]: r for r in rows}
+        if "exact" not in by or "greedy" not in by:
+            return "n/a"
+        return f"exact/greedy={by['exact']['bound']/by['greedy']['bound']:.3f}"
+
+    bench("solvers", solver_compare.run,
+          lambda r: _solver_ratio(r) if r else "n/a")
     bench("fig5_small", fig5_small.run,
           lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
     bench("fig_large", fig_large.run,

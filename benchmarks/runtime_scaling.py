@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import annealing, greedy, jobs as J, network as N
+from repro.core import jobs as J, network as N, solve
 
 
 def synthetic_network(v: int, seed: int) -> N.ComputeNetwork:
@@ -36,22 +36,18 @@ def run(verbose: bool = True, sizes=(8, 24, 48)) -> list[dict]:
         net = synthetic_network(v, 0)
         batch = J.batch_jobs(jobs_for(v, 10, 0))
         t0 = time.time()
-        sol = greedy.greedy_route(net, batch)
+        sol = solve(net, batch, method="greedy")
         g_first = time.time() - t0          # includes jit for this shape
-        t0 = time.time()
-        greedy.greedy_route(net, batch)
-        g_warm = time.time() - t0
-        greedy.greedy_route(net, batch, lazy=True)  # warm the lazy kernels
-        t0 = time.time()
-        lazy_sol = greedy.greedy_route(net, batch, lazy=True)
-        g_lazy = time.time() - t0
-        t0 = time.time()
-        annealing.anneal(net, batch, seed=0, d=0.99, num_chains=1)
-        sa_t = time.time() - t0
+        g_warm = solve(net, batch, method="greedy").meta["solve_s"]
+        solve(net, batch, method="lazy")    # warm the lazy kernels
+        lazy_sol = solve(net, batch, method="lazy")
+        g_lazy = lazy_sol.meta["solve_s"]
+        sa_t = solve(net, batch, method="sa", seed=0, d=0.99,
+                     num_chains=1).meta["solve_s"]
         rows.append(dict(V=v, greedy_cold_s=g_first, greedy_warm_s=g_warm,
                          greedy_lazy_s=g_lazy,
-                         lazy_routings=getattr(lazy_sol, "_n_routings", -1),
-                         sa_s=sa_t, bound=sol.makespan_bound))
+                         lazy_routings=lazy_sol.meta.get("n_routings", -1),
+                         sa_s=sa_t, bound=sol.bound()))
         if verbose:
             print(f"  V={v:4d}: greedy {g_warm:7.3f}s (cold {g_first:6.1f}s) "
                   f"lazy {g_lazy:7.3f}s "

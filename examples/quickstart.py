@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the paper's 5-node topology, routes 2 VGG19 + 6 ResNet34 inference
-jobs with the greedy algorithm (Alg. 1), verifies the fictitious-system
-bound against the event-driven simulator, and refines with SA (Alg. 2).
+jobs through the unified solver API (``solve(net, batch, method=...)`` ->
+``Plan``), verifies the fictitious-system bound against the event-driven
+simulator, and refines with SA (Alg. 2) — same call, different method
+string.
 """
 import sys
 import pathlib
@@ -13,7 +15,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.configs import registry
-from repro.core import annealing, greedy, jobs as J, network as N, schedule
+from repro.core import jobs as J, network as N, solve
 
 
 def main():
@@ -27,24 +29,30 @@ def main():
     batch = J.batch_jobs(jobs)
 
     print("== greedy (Algorithm 1) ==")
-    sol = greedy.greedy_route(net, batch)
-    for p, j in enumerate(sol.order):
+    plan = solve(net, batch, method="greedy")
+    for p, j in enumerate(plan.order):
         L = jobs[j].num_layers
         route = [names[jobs[j].src]] + [names[n] for n in
-                                        dict.fromkeys(sol.assign[j][:L])] \
+                                        dict.fromkeys(plan.assign[j][:L])] \
             + [names[jobs[j].dst]]
-        print(f"  prio {p}: {jobs[j].name:12s} bound {sol.bounds[j]:8.3f}s "
+        print(f"  prio {p}: {jobs[j].name:12s} bound {plan.bounds[j]:8.3f}s "
               f"via {'->'.join(route)}")
-    sim = schedule.simulate(net, batch, sol.assign, sol.order)
-    print(f"  makespan: bound {sol.makespan_bound:.3f}s  "
+    sim = plan.simulate(net, batch)
+    print(f"  makespan: bound {plan.bound():.3f}s  "
           f"simulated {sim.makespan:.3f}s")
-    assert sim.makespan <= sol.makespan_bound + 1e-6
+    assert sim.makespan <= plan.bound() + 1e-6
 
     print("== simulated annealing (Algorithm 2, warm-started) ==")
-    sa = annealing.anneal(net, batch, seed=0, d=0.99, num_chains=4,
-                          init="greedy", block_move_prob=0.3)
-    sim2 = schedule.simulate(net, batch, sa.assign, sa.priority)
-    print(f"  makespan: bound {sa.bound:.3f}s  simulated {sim2.makespan:.3f}s")
+    sa = solve(net, batch, method="sa", seed=0, d=0.99, num_chains=4,
+               init="greedy", block_move_prob=0.3)
+    sim2 = sa.simulate(net, batch)
+    print(f"  makespan: bound {sa.bound():.3f}s  simulated {sim2.makespan:.3f}s")
+
+    # every plan is one JSON-serializable artifact, whatever solved it
+    roundtrip = type(sa).from_dict(sa.to_dict())
+    assert np.array_equal(roundtrip.assign, sa.assign)
+    print(f"  plan serialized: solver={roundtrip.solver} "
+          f"({len(str(sa.to_dict()))} chars)")
     print("OK")
 
 

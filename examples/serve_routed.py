@@ -47,13 +47,18 @@ def main():
     used = {n for p in plans for n in p.nodes_used}
     print(f"  -> load spread over {len(used)} slices")
 
-    # a straggling slice is routed around on the next batch
+    # a straggling slice: re-plan the *same* batch against the new health
     victim = plans[0].nodes_used[0]
     sched.report_slowdown(victim, 10.0)
-    plans2 = sched.schedule([Request("olmo_1b", 0, 5, name="retry")])
-    assert victim not in plans2[0].nodes_used
-    print(f"  straggler: slice {victim} reported 10x slow -> "
-          f"new job placed on {plans2[0].nodes_used}")
+    plans2 = sched.replan_last()
+    moved = {n for p in plans2 for n in p.nodes_used}
+    print(f"  straggler: slice {victim} reported 10x slow -> batch re-planned "
+          f"onto {sorted(moved)}")
+
+    # the whole placement is one Plan: serializable, solver-tagged
+    plan = sched.last_plan
+    print(f"  plan: solver={plan.solver} bound {plan.bound()*1e3:.2f} ms "
+          f"({len(str(plan.to_dict()))} chars as JSON)")
 
     # -- 3. actually serve a batch of requests (reduced model, CPU)
     cfg = registry.smoke_config("smollm_135m")

@@ -8,17 +8,22 @@ from .network import (ComputeNetwork, INF, make_network, small_topology,
 from .jobs import InferenceJob, JobBatch, batch_jobs, synthetic_job
 from .routing import (Route, route_single, route_batch,
                       cost_given_assignment, commit_assignment)
+from .plan import Plan
+from .solvers import Solver, solve, register as register_solver, \
+    available as available_solvers
 from .greedy import GreedySolution, greedy_route
 from .annealing import SAResult, anneal, evaluate_solution
 from .schedule import SimResult, replay_solution, simulate
-from . import bounds, exact, layered_graph, shortest_path
+from . import bounds, exact, layered_graph, shortest_path, solvers
 
 __all__ = [
     "ComputeNetwork", "INF", "make_network", "small_topology", "us_backbone",
     "InferenceJob", "JobBatch", "batch_jobs", "synthetic_job",
     "Route", "route_single", "route_batch", "cost_given_assignment",
-    "commit_assignment", "GreedySolution", "greedy_route",
+    "commit_assignment",
+    "Plan", "Solver", "solve", "register_solver", "available_solvers",
+    "GreedySolution", "greedy_route",  # deprecated alias + legacy name
     "SAResult", "anneal", "evaluate_solution",
     "SimResult", "replay_solution", "simulate",
-    "bounds", "exact", "layered_graph", "shortest_path",
+    "bounds", "exact", "layered_graph", "shortest_path", "solvers",
 ]

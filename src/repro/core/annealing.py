@@ -16,7 +16,6 @@ tensor program (accelerator-friendly), and the whole annealing run is one
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 
@@ -26,15 +25,14 @@ import numpy as np
 
 from .network import ComputeNetwork
 from .jobs import JobBatch
+from .plan import Plan
 from . import routing
 
-
-@dataclasses.dataclass(frozen=True)
-class SAResult:
-    assign: np.ndarray    # [J, Lmax]
-    priority: np.ndarray  # [J] job index per slot (slot 0 = highest)
-    bound: float          # fictitious-system makespan bound
-    history: np.ndarray   # [iters] best-so-far bound (chain-min when K > 1)
+# Deprecated alias (one release): anneal now returns the canonical Plan.
+# NB the old SAResult.priority was slot->job, i.e. the new ``Plan.order``;
+# the old scalar ``.bound`` is ``Plan.bound()`` and ``.history`` lives in
+# ``Plan.meta["history"]``.
+SAResult = Plan
 
 
 def evaluate_solution(net: ComputeNetwork, batch: JobBatch, assign: jax.Array,
@@ -127,7 +125,7 @@ def _anneal_chain(net: ComputeNetwork, batch: JobBatch, key: jax.Array,
 def anneal(net: ComputeNetwork, batch: JobBatch, *, seed: int = 0,
            t0: float = 1.0, t_lim: float = 1e-3, d: float = 0.995,
            k_boltz: float = 1.0, num_chains: int = 1,
-           init: str = "random", block_move_prob: float = 0.0) -> SAResult:
+           init: str = "random", block_move_prob: float = 0.0) -> Plan:
     """Run Algorithm 2.
 
     Defaults are paper-faithful.  Beyond-paper knobs (recorded separately in
@@ -153,5 +151,14 @@ def anneal(net: ComputeNetwork, batch: JobBatch, *, seed: int = 0,
     best_a, best_p, best_c, hist = jax.vmap(run)(keys)
     best_a, best_p, best_c, hist = jax.device_get((best_a, best_p, best_c, hist))
     i = int(np.argmin(best_c))
-    return SAResult(assign=np.asarray(best_a[i]), priority=np.asarray(best_p[i]),
-                    bound=float(best_c[i]), history=np.min(hist, axis=0))
+    assign = np.asarray(best_a[i])
+    order = np.asarray(best_p[i])  # SA's "priority" vector is slot -> job
+    # Replay the winning chain to recover per-job bounds, explicit transfer
+    # paths, and the final queue state (the scalar chain cost is only the
+    # makespan max).
+    from . import schedule
+    bounds, paths, final = schedule.replay_solution(net, batch, assign, order)
+    return Plan.from_order(
+        assign, order, bounds, solver="sa", paths=paths, net=final,
+        meta={"history": np.min(hist, axis=0), "iters": iters,
+              "num_chains": num_chains, "chain_cost": float(best_c[i])})

@@ -5,6 +5,10 @@ including the once-per-node z_u semantics, by dynamic programming over
 (layer, node, set-of-wait-charged-nodes).  Exponential in |V_p| but exact —
 the oracle for small randomized instances (V <= ~14).
 
+``exact_plan`` lifts the single-job oracle to the multi-job problem (every
+priority order x exact sequential routing) and returns a canonical
+:class:`~repro.core.plan.Plan` — registered as ``solve(..., method="exact")``.
+
 ``brute_force_makespan`` enumerates (assignments x priorities) on tiny
 instances and simulates the actual system, giving the true optimum T* for
 approximation-ratio tests (Theorem 2 / Corollary 1).
@@ -12,10 +16,13 @@ approximation-ratio tests (Theorem 2 / Corollary 1).
 from __future__ import annotations
 
 import itertools
+import math
 
 import numpy as np
 
 from .network import ComputeNetwork
+from .jobs import JobBatch
+from .plan import Plan
 
 _INF = 1e30
 
@@ -100,3 +107,82 @@ def exact_route_bitmask(net: ComputeNetwork, comp: np.ndarray, data: np.ndarray,
             assign.append(u)
         assign.reverse()
     return float(best), assign
+
+
+def exact_plan(net: ComputeNetwork, batch: JobBatch, *,
+               max_jobs: int = 7) -> Plan:
+    """Exact solver for the multi-job fictitious-system objective.
+
+    Enumerates every priority order (J! of them) and, within each order,
+    routes each job *exactly* with the bitmask oracle against the queue
+    state left by its higher-priority predecessors — i.e. the exact version
+    of the sequential commit process that both Alg. 1 and Alg. 2 bound.
+    Exponential in both J and |V_p|; intended for oracle checks on tiny
+    instances (J <= ~6, V <= ~14).
+    """
+    from . import routing
+
+    J = batch.num_jobs
+    if J > max_jobs:
+        raise ValueError(f"exact solver is for <= {max_jobs} jobs, got {J}")
+    if net.num_nodes > 16:
+        raise ValueError("exact solver is for small graphs (V <= 16)")
+    comp = np.asarray(batch.comp, np.float64)
+    data = np.asarray(batch.data, np.float64)
+    nl = np.asarray(batch.num_layers)
+    src = np.asarray(batch.src)
+    dst = np.asarray(batch.dst)
+    lmax = batch.max_layers
+
+    best_mk = np.inf
+    best: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+    for perm in itertools.permutations(range(J)):
+        cur = net
+        assign = np.zeros((J, lmax), np.int32)
+        bounds = np.zeros((J,), np.float64)
+        for j in perm:
+            L = int(nl[j])
+            cost, a = exact_route_bitmask(
+                cur, comp[j, :L], data[j, : L + 1], int(src[j]), int(dst[j]))
+            bounds[j] = cost
+            assign[j, :L] = a
+            if L:  # pad with the last compute node (masked out of all costs)
+                assign[j, L:] = a[-1]
+            cur = routing.commit_assignment(
+                cur, batch.comp[j], batch.data[j], batch.src[j],
+                batch.dst[j], batch.num_layers[j], assign[j])
+            if bounds[j] >= best_mk:
+                break  # this order can't beat the incumbent
+        else:
+            if bounds.max() < best_mk:
+                best_mk = float(bounds.max())
+                best = (assign, np.asarray(perm, np.int32), bounds)
+    assert best is not None
+    assign, order, bounds = best
+    return Plan.from_order(assign, order, bounds, solver="exact",
+                           meta={"orders_tried": math.factorial(J)})
+
+
+def brute_force_makespan(net: ComputeNetwork, batch: JobBatch) -> float:
+    """True optimum T*: enumerate (assignments x priorities), simulate.
+
+    The oracle for approximation-ratio tests (Theorem 2 / Corollary 1).
+    Doubly exponential — tiny instances only.
+    """
+    from . import schedule
+
+    mu = np.asarray(net.mu_node)
+    comp_nodes = np.nonzero(mu > 0)[0]
+    J = batch.num_jobs
+    Ls = [int(batch.num_layers[j]) for j in range(J)]
+    best = np.inf
+    for assigns in itertools.product(
+            *[itertools.product(comp_nodes, repeat=Ls[j]) for j in range(J)]):
+        a = np.zeros((J, batch.max_layers), np.int32)
+        for j in range(J):
+            a[j, :Ls[j]] = assigns[j]
+            a[j, Ls[j]:] = assigns[j][-1] if Ls[j] else 0
+        for perm in itertools.permutations(range(J)):
+            sim = schedule.simulate(net, batch, a, np.asarray(perm))
+            best = min(best, sim.makespan)
+    return float(best)

@@ -11,7 +11,6 @@ the per-round tensor work).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
@@ -20,20 +19,11 @@ import numpy as np
 
 from .network import INF, ComputeNetwork
 from .jobs import JobBatch
+from .plan import Plan
 from . import routing
 
-
-@dataclasses.dataclass(frozen=True)
-class GreedySolution:
-    order: np.ndarray        # [J] job indices, highest priority first
-    priority: np.ndarray     # [J] priority slot of each job (0 = highest)
-    assign: np.ndarray       # [J, Lmax] compute node per layer
-    bounds: np.ndarray       # [J] fictitious-system completion bound C_j(Q_p)
-    net: ComputeNetwork      # final queue state
-
-    @property
-    def makespan_bound(self) -> float:
-        return float(np.max(self.bounds))
+# Deprecated alias (one release): greedy now returns the canonical Plan.
+GreedySolution = Plan
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -50,7 +40,7 @@ def _round(net: ComputeNetwork, batch: JobBatch, routed: jax.Array,
 
 def greedy_route(net: ComputeNetwork, batch: JobBatch,
                  *, use_pallas: bool | None = None,
-                 lazy: bool = False) -> GreedySolution:
+                 lazy: bool = False) -> Plan:
     """Run Algorithm 1 to completion.
 
     ``lazy=True`` is the beyond-paper *lazy greedy* (EXPERIMENTS.md §Perf):
@@ -76,10 +66,8 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
         bounds[j] = float(cost)
         assign[j] = np.asarray(a)
         routed = routed.at[j].set(True)
-    priority = np.empty((J,), np.int32)
-    priority[order] = np.arange(J, dtype=np.int32)
-    return GreedySolution(order=order, priority=priority, assign=assign,
-                          bounds=bounds, net=cur)
+    return Plan.from_order(assign, order, bounds, solver="greedy",
+                           meta={"n_routings": J * J}, net=cur)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -98,7 +86,7 @@ def _commit_one(net, batch, j, assign, *, use_pallas=None):
 
 
 def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
-                 *, use_pallas: bool | None = None) -> GreedySolution:
+                 *, use_pallas: bool | None = None) -> Plan:
     J, lmax = batch.num_jobs, batch.max_layers
     r0 = routing.route_batch(net, batch, use_pallas=use_pallas)
     cost = np.array(r0.cost, np.float64)             # cached lower bounds
@@ -127,9 +115,5 @@ def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
         cur = _commit_one(cur, batch, j, assign_c[j], use_pallas=use_pallas)
         for x in remaining:
             fresh[x] = False
-    priority = np.empty((J,), np.int32)
-    priority[order] = np.arange(J, dtype=np.int32)
-    sol = GreedySolution(order=order, priority=priority, assign=assign,
-                         bounds=bounds, net=cur)
-    object.__setattr__(sol, "_n_routings", n_routings)
-    return sol
+    return Plan.from_order(assign, order, bounds, solver="lazy",
+                           meta={"n_routings": n_routings}, net=cur)

@@ -7,10 +7,12 @@ serves the highest-priority arrived task, preempting lower-priority work on
 arrival (preempt-resume, work-conserving) — exactly the paper's scheduling
 model.  Tests assert bound >= simulated completion on every instance.
 
-``replay_solution`` reconstructs, for any (assignment, priority) solution,
-the per-job fictitious bounds, the explicit per-layer transfer paths (chosen
-against the queue state seen at that job's priority level, as both Alg. 1
-and Alg. 2 do), and the final queue state.
+``replay_solution`` reconstructs, for any (assignment, priority) solution —
+raw arrays or a :class:`~repro.core.plan.Plan` — the per-job fictitious
+bounds, the explicit per-layer transfer paths (chosen against the queue
+state seen at that job's priority level, as both Alg. 1 and Alg. 2 do), and
+the final queue state.  ``Plan.replay``/``Plan.simulate`` are the
+plan-first entry points.
 """
 from __future__ import annotations
 
@@ -29,10 +31,23 @@ class SimResult:
     makespan: float
 
 
-def replay_solution(net: ComputeNetwork, batch: JobBatch, assign, order):
+def _as_assign_order(assign, order):
+    """Accept either (assign, order) arrays or a Plan in the first slot."""
+    from .plan import Plan
+    if isinstance(assign, Plan):
+        if order is not None:
+            raise ValueError("pass either a Plan or (assign, order), not both")
+        return assign.assign, assign.order
+    if order is None:
+        raise ValueError("order is required when assign is an array")
+    return assign, order
+
+
+def replay_solution(net: ComputeNetwork, batch: JobBatch, assign, order=None):
     """Replay jobs in priority order, committing loads; return bounds+paths."""
     import jax.numpy as jnp
 
+    assign, order = _as_assign_order(assign, order)
     assign = jnp.asarray(assign, jnp.int32)
     J = batch.num_jobs
     bounds = np.zeros((J,), np.float64)
@@ -48,9 +63,17 @@ def replay_solution(net: ComputeNetwork, batch: JobBatch, assign, order):
     return bounds, paths, cur
 
 
-def simulate(net: ComputeNetwork, batch: JobBatch, assign, order,
+def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,
              paths: dict[int, list[list[tuple[int, int]]]] | None = None) -> SimResult:
-    """Event-driven simulation of the routed jobs in the actual system."""
+    """Event-driven simulation of the routed jobs in the actual system.
+
+    ``assign`` may be a :class:`~repro.core.plan.Plan` (then ``order`` must
+    be omitted and the plan's stored paths, if any, are used).
+    """
+    from .plan import Plan
+    if isinstance(assign, Plan) and paths is None:
+        paths = assign.paths
+    assign, order = _as_assign_order(assign, order)
     if paths is None:
         _, paths, _ = replay_solution(net.reset_queues(), batch, assign, order)
 

@@ -1,0 +1,110 @@
+"""One entry point for every routing algorithm: ``solve(net, batch, method=...)``.
+
+Every algorithm — greedy (Alg. 1), lazy greedy, simulated annealing
+(Alg. 2), the exact oracle — is a :class:`Solver`: a callable
+``(net, batch, **opts) -> Plan``.  Solvers live in a registry keyed by a
+short method name, so choosing an algorithm is a string flag everywhere
+(serving scheduler, launch drivers, benchmarks) and a new solver (beam
+search, LP rounding, multi-objective) is a drop-in registration:
+
+    from repro.core import solvers
+
+    @solvers.register("beam")
+    def beam_solve(net, batch, *, width=8, **opts) -> Plan:
+        ...
+
+    plan = solvers.solve(net, batch, method="beam", width=16)
+
+Built-in methods: ``greedy``, ``lazy``, ``sa``, ``exact``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Protocol, runtime_checkable
+
+from .network import ComputeNetwork
+from .jobs import JobBatch
+from .plan import Plan
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """A routing algorithm: maps (network, job batch, options) to a Plan."""
+
+    def __call__(self, net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+        ...
+
+
+_REGISTRY: dict[str, Solver] = {}
+
+
+def register(name: str) -> Callable[[Solver], Solver]:
+    """Decorator: register a solver under ``name`` (overwrites silently so
+    downstream code can shadow a built-in with a tuned variant)."""
+
+    def deco(fn: Solver) -> Solver:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    """Registered method names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Solver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; available: {', '.join(available())}"
+        ) from None
+
+
+def solve(net: ComputeNetwork, batch: JobBatch, method: str = "greedy",
+          **opts) -> Plan:
+    """Route a job batch with the named algorithm; always returns a Plan.
+
+    The plan's ``meta`` records the method name and wall-clock solve time
+    (``meta["solve_s"]``) on top of whatever the solver itself reports.
+    """
+    fn = get(method)
+    t0 = time.perf_counter()
+    plan = fn(net, batch, **opts)
+    if not isinstance(plan, Plan):
+        raise TypeError(f"solver {method!r} returned {type(plan).__name__}, "
+                        "expected Plan")
+    # Fresh meta dict: a solver may return a shared/cached Plan, and the
+    # caller's copy must not have its provenance clobbered by later calls.
+    meta = {"method": method, **plan.meta,
+            "solve_s": time.perf_counter() - t0}
+    return dataclasses.replace(plan, meta=meta)
+
+
+# -- built-ins --------------------------------------------------------------
+
+@register("greedy")
+def _solve_greedy(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    from . import greedy
+    return greedy.greedy_route(net, batch, **opts)
+
+
+@register("lazy")
+def _solve_lazy(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    from . import greedy
+    return greedy.greedy_route(net, batch, lazy=True, **opts)
+
+
+@register("sa")
+def _solve_sa(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    from . import annealing
+    return annealing.anneal(net, batch, **opts)
+
+
+@register("exact")
+def _solve_exact(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    from . import exact
+    return exact.exact_plan(net, batch, **opts)

@@ -1,0 +1,6 @@
+"""Version shims for the Pallas TPU API shared by the kernel modules."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 exposes the TPU compiler options as TPUCompilerParams.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))

@@ -1,18 +1,21 @@
 """Paper driver: route DNN inference jobs over the evaluation topologies.
 
   PYTHONPATH=src python -m repro.launch.route --topology small \
-      --jobs vgg19:2,resnet34:6 --scale 1e-4 --algo both --seed 0
+      --jobs vgg19:2,resnet34:6 --scale 1e-4 --methods greedy,sa --seed 0
+
+``--methods`` takes any comma list of registered solver names (see
+``repro.core.solvers.available()``), e.g. ``greedy,lazy,sa``.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
-from repro.core import (annealing, bounds, greedy, jobs as J, network as N,
-                        schedule)
+from repro.core import jobs as J, network as N, solvers
 from repro.configs import registry
+
+_SA_DEFAULTS = dict(num_chains=4)
 
 
 def build_jobs(spec: str, num_nodes: int, seed: int) -> list[J.InferenceJob]:
@@ -38,7 +41,7 @@ def build_jobs(spec: str, num_nodes: int, seed: int) -> list[J.InferenceJob]:
     return out
 
 
-def run(topology: str, jobs_spec: str, scale: float, algo: str, seed: int,
+def run(topology: str, jobs_spec: str, scale: float, methods: str, seed: int,
         sa_iters_d: float = 0.995, verbose: bool = True) -> dict:
     net, names = (N.small_topology(capacity_scale=scale) if topology == "small"
                   else N.us_backbone(capacity_scale=scale))
@@ -46,27 +49,19 @@ def run(topology: str, jobs_spec: str, scale: float, algo: str, seed: int,
     batch = J.batch_jobs(jobs)
     out = {"topology": topology, "scale": scale, "J": len(jobs)}
 
-    if algo in ("greedy", "both"):
-        t0 = time.time()
-        sol = greedy.greedy_route(net, batch)
-        out["greedy_s"] = time.time() - t0
-        sim = schedule.simulate(net, batch, sol.assign, sol.order)
-        out["greedy_bound"] = sol.makespan_bound
-        out["greedy_sim"] = sim.makespan
+    for method in (m.strip() for m in methods.split(",") if m.strip()):
+        opts = {}
+        if method == "sa":
+            opts = dict(_SA_DEFAULTS, seed=seed, d=sa_iters_d)
+        plan = solvers.solve(net, batch, method=method, **opts)
+        sim = plan.simulate(net, batch)
+        out[f"{method}_s"] = plan.meta["solve_s"]
+        out[f"{method}_bound"] = plan.bound()
+        out[f"{method}_sim"] = sim.makespan
         if verbose:
-            print(f"[greedy] bound {sol.makespan_bound:.3f}s "
-                  f"sim {sim.makespan:.3f}s ({out['greedy_s']:.2f}s to solve)")
-    if algo in ("sa", "both"):
-        t0 = time.time()
-        sa = annealing.anneal(net, batch, seed=seed, d=sa_iters_d,
-                              num_chains=4)
-        out["sa_s"] = time.time() - t0
-        sim = schedule.simulate(net, batch, sa.assign, sa.priority)
-        out["sa_bound"] = sa.bound
-        out["sa_sim"] = sim.makespan
-        if verbose:
-            print(f"[sa]     bound {sa.bound:.3f}s sim {sim.makespan:.3f}s "
-                  f"({out['sa_s']:.2f}s to solve)")
+            print(f"[{method}] bound {plan.bound():.3f}s "
+                  f"sim {sim.makespan:.3f}s "
+                  f"({plan.meta['solve_s']:.2f}s to solve)")
     return out
 
 
@@ -75,10 +70,17 @@ def main():
     ap.add_argument("--topology", default="small", choices=["small", "us"])
     ap.add_argument("--jobs", default="vgg19:2,resnet34:6")
     ap.add_argument("--scale", type=float, default=1e-4)
-    ap.add_argument("--algo", default="both", choices=["greedy", "sa", "both"])
+    ap.add_argument("--methods", default="greedy,sa",
+                    help="comma list of registered solvers "
+                         f"(available: {','.join(solvers.available())})")
+    ap.add_argument("--algo", default=None,
+                    help="deprecated; 'both' = greedy,sa, else passed through")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    run(args.topology, args.jobs, args.scale, args.algo, args.seed)
+    methods = args.methods
+    if args.algo:  # back-compat with the old flag
+        methods = "greedy,sa" if args.algo == "both" else args.algo
+    run(args.topology, args.jobs, args.scale, methods, args.seed)
 
 
 if __name__ == "__main__":

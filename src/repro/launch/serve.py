@@ -32,15 +32,19 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--method", default="greedy",
+                    help="routing solver (greedy|lazy|sa|exact|registered)")
     args = ap.parse_args()
 
-    sched = RoutedScheduler(default_cluster())
+    sched = RoutedScheduler(default_cluster(), method=args.method)
     plans = sched.schedule([
         Request(args.arch, src=0, dst=5, seq_len=2048, name=f"req{i}")
         for i in range(args.requests)])
     for p in plans:
         print(f"[serve] prio {p.priority} {p.job_name}: slices "
               f"{p.nodes_used} bound {p.bound_s*1e3:.2f} ms")
+    print(f"[serve] plan: solver={sched.last_plan.solver} "
+          f"makespan bound {sched.last_plan.bound()*1e3:.2f} ms")
 
     cfg = registry.smoke_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))

@@ -18,6 +18,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def get_abstract_mesh():
+    """Ambient abstract mesh, or None on jax versions without the API."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def maybe_shard(x, *axes):
     """Activation-sharding anchor: constrain ``x`` to PartitionSpec(*axes).
 
@@ -26,7 +32,7 @@ def maybe_shard(x, *axes):
     single CPU device while the production-mesh dry-run gets explicit
     batch/tensor sharding anchors (GSPMD propagates the rest).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)
@@ -235,7 +241,7 @@ def _flash_bshd(q, k, v, *, scale=None):
                                    scale=scale)
         return jnp.moveaxis(out.reshape(b_, h_, s_, -1), 1, 2)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return local(q, k, v)
     names = set(mesh.axis_names)

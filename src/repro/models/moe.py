@@ -56,7 +56,7 @@ def moe_block(p, x, cfg):
     to the expert-weight gathers.
     """
     if cfg.moe_local_dispatch:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = cm.get_abstract_mesh()
         if mesh is not None and not mesh.empty:
             names = set(mesh.axis_names)
             # dispatch over ALL mesh axes (batch over data *and* model) —

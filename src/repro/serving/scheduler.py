@@ -7,15 +7,23 @@ bytes/s, and the per-slice backlog of already-scheduled work is exactly the
 queue vector Q the formulation charges waiting time against.
 
 Every batch of inference requests is turned into InferenceJobs via the
-architecture cost profiles (configs/<arch>.cost_profile) and placed with
-Algorithm 1 (greedy): each request gets (a) the nodes computing each layer
-range — i.e. a layer-wise model split when transfers are cheap relative to
-queueing, or a single fast node when they are not — and (b) a priority.
+architecture cost profiles (configs/<arch>.cost_profile) and placed through
+the unified solver entry point (``solvers.solve`` — greedy by default, any
+registered method by name): each request gets (a) the nodes computing each
+layer range — i.e. a layer-wise model split when transfers are cheap
+relative to queueing, or a single fast node when they are not — and (b) a
+priority.  The solver's :class:`~repro.core.plan.Plan` is stored whole;
+:class:`Placement` objects are per-job *views* over it, so the full plan
+(including its queue state and provenance) can be serialized, shipped, or
+re-planned without reassembling anything.
 
 Straggler mitigation falls out of the formulation: a slow or overloaded
 slice has a long queue (or degraded mu_u after ``report_slowdown``), so its
 waiting term grows and new jobs route around it — tests/test_serving.py
-asserts this end-to-end.
+asserts this end-to-end.  ``replan_last`` re-places the most recent batch
+against the updated cluster health (incremental re-plan: the pre-batch
+queue state is restored, the stored jobs re-solved, and the new plan
+committed in place of the old one).
 """
 from __future__ import annotations
 
@@ -23,16 +31,33 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import greedy, jobs as J, network as N
+from repro.core import jobs as J, network as N, solvers
+from repro.core.plan import Plan
 from repro.configs import registry
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class Placement:
+    """View over one job of a stored :class:`Plan`."""
+
+    plan: Plan
+    job: int                    # row in the plan
     job_name: str
-    priority: int
-    assign: np.ndarray          # [L] node per layer
-    bound_s: float              # completion-time upper bound
+    num_layers: int
+
+    @property
+    def priority(self) -> int:
+        return int(self.plan.priority[self.job])
+
+    @property
+    def assign(self) -> np.ndarray:
+        """[L] node per (real) layer."""
+        return self.plan.job_assign(self.job, self.num_layers)
+
+    @property
+    def bound_s(self) -> float:
+        """Completion-time upper bound."""
+        return float(self.plan.bounds[self.job])
 
     @property
     def nodes_used(self) -> list[int]:
@@ -54,10 +79,16 @@ class Request:
 
 
 class RoutedScheduler:
-    def __init__(self, net: N.ComputeNetwork):
+    def __init__(self, net: N.ComputeNetwork, *, method: str = "greedy",
+                 **solver_opts):
         self.base_net = net
         self.net = net
+        self.method = method
+        self.solver_opts = solver_opts
         self._slowdown = np.ones((net.num_nodes,), np.float32)
+        self._last: tuple[J.JobBatch, list[J.InferenceJob],
+                          N.ComputeNetwork] | None = None
+        self.last_plan: Plan | None = None
 
     # -- cluster health -----------------------------------------------------
     def report_slowdown(self, node: int, factor: float) -> None:
@@ -67,6 +98,8 @@ class RoutedScheduler:
     def drain(self) -> None:
         """All scheduled work finished: reset queues."""
         self.net = self.net.reset_queues()
+        self._last = None
+        self.last_plan = None
 
     def _effective_net(self) -> N.ComputeNetwork:
         import jax.numpy as jnp
@@ -74,6 +107,27 @@ class RoutedScheduler:
         return dataclasses.replace(self.net, mu_node=mu)
 
     # -- placement ----------------------------------------------------------
+    def _placements(self, plan: Plan,
+                    infer_jobs: list[J.InferenceJob]) -> list[Placement]:
+        # Walk priority slots directly, so the list is born sorted.
+        out = [Placement(plan=plan, job=int(j),
+                         job_name=infer_jobs[j].name,
+                         num_layers=infer_jobs[j].num_layers)
+               for j in plan.order]
+        assert [p.priority for p in out] == list(range(len(out)))
+        return out
+
+    def _solve_and_commit(self, batch: J.JobBatch) -> Plan:
+        plan = solvers.solve(self._effective_net(), batch,
+                             method=self.method, **self.solver_opts)
+        if plan.net is None:  # e.g. the exact solver reports no queue state
+            plan = dataclasses.replace(
+                plan, net=plan.commit(self._effective_net(), batch))
+        self.net = dataclasses.replace(
+            self.net, q_node=plan.net.q_node, q_link=plan.net.q_link)
+        self.last_plan = plan
+        return plan
+
     def schedule(self, requests: list[Request]) -> list[Placement]:
         infer_jobs = []
         for i, r in enumerate(requests):
@@ -86,13 +140,24 @@ class RoutedScheduler:
                 r.name or f"req{i}", r.src, r.dst,
                 comp.astype(np.float32), data.astype(np.float32)))
         batch = J.batch_jobs(infer_jobs)
-        sol = greedy.greedy_route(self._effective_net(), batch)
-        self.net = dataclasses.replace(
-            self.net, q_node=sol.net.q_node, q_link=sol.net.q_link)
-        out = []
-        for p, j in enumerate(sol.order):
-            L = infer_jobs[j].num_layers
-            out.append(Placement(
-                job_name=infer_jobs[j].name, priority=p,
-                assign=sol.assign[j][:L], bound_s=float(sol.bounds[j])))
-        return sorted(out, key=lambda x: x.priority)
+        pre_net = self.net
+        plan = self._solve_and_commit(batch)
+        # Record only after the solve succeeds, so a raising solver can't
+        # poison replan_last() with a batch that was never scheduled.
+        self._last = (batch, infer_jobs, pre_net)
+        return self._placements(plan, infer_jobs)
+
+    def replan_last(self) -> list[Placement] | None:
+        """Re-place the most recent batch against updated cluster health.
+
+        Rolls the queue state back to just before that batch was committed,
+        re-solves with the current slowdown factors, and commits the new
+        plan — incremental re-planning after ``report_slowdown`` without the
+        caller resubmitting requests.  Returns None if nothing to re-plan.
+        """
+        if self._last is None:
+            return None
+        batch, infer_jobs, pre_net = self._last
+        self.net = pre_net
+        plan = self._solve_and_commit(batch)
+        return self._placements(plan, infer_jobs)

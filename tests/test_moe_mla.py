@@ -79,6 +79,9 @@ def test_mla_full_config_cache_ratio():
 def test_moe_local_dispatch_trivial_mesh():
     """shard_map'ed per-shard dispatch == global dispatch on a 1-dev mesh."""
     import jax
+    import pytest
+    if not hasattr(jax, "set_mesh"):
+        pytest.skip("ambient-mesh API (jax.set_mesh) not in this jax version")
     cfg = dataclasses.replace(registry.smoke_config("olmoe_1b_7b"),
                               dtype=jnp.float32, moe_capacity_factor=8.0)
     params = M.init_params(cfg, jax.random.PRNGKey(0))

@@ -3,7 +3,7 @@ relationships: evaluator consistency, bound >= simulation, SA quality."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (annealing, greedy, jobs as J, network as N,
                         schedule)
@@ -27,11 +27,11 @@ def test_fig1_greedy_and_sa():
     """Fig. 1: SA finds the completion-time-aware split (makespan 1.0s)."""
     net, batch = _fig1()
     sol = greedy.greedy_route(net, batch)
-    sim = schedule.simulate(net, batch, sol.assign, sol.order)
-    assert sim.makespan <= sol.makespan_bound + 1e-6
+    sim = sol.simulate(net, batch)
+    assert sim.makespan <= sol.bound() + 1e-6
     sa = annealing.anneal(net, batch, seed=0, d=0.98, num_chains=4)
-    assert sa.bound <= 1.0 + 1e-3      # the (u, v)-disjoint optimum
-    sim2 = schedule.simulate(net, batch, sa.assign, sa.priority)
+    assert sa.bound() <= 1.0 + 1e-3    # the (u, v)-disjoint optimum
+    sim2 = sa.simulate(net, batch)
     np.testing.assert_allclose(sim2.makespan, 1.0, rtol=1e-3)
 
 
@@ -77,7 +77,7 @@ def test_sa_warm_start_never_worse_than_greedy():
     sol = greedy.greedy_route(net, batch)
     sa = annealing.anneal(net, batch, seed=2, d=0.97, num_chains=2,
                           init="greedy", block_move_prob=0.3)
-    assert sa.bound <= sol.makespan_bound * (1 + 1e-5)
+    assert sa.bound() <= sol.bound() * (1 + 1e-5)
 
 
 def test_replay_matches_greedy():
@@ -130,4 +130,4 @@ def test_lazy_greedy_matches_eager():
         lazy = G.greedy_route(net, batch, lazy=True)
         np.testing.assert_allclose(lazy.makespan_bound, eager.makespan_bound,
                                    rtol=1e-5)
-        assert getattr(lazy, "_n_routings") <= 6 * 6
+        assert lazy.meta["n_routings"] <= 6 * 6

@@ -1,0 +1,137 @@
+"""Unified Plan/Solver API: registry, serialization, cross-solver invariants."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (Plan, available_solvers, jobs as J, network as N,
+                        register_solver, solve, solvers)
+from util import random_instance
+
+
+def _instance(seed, num_jobs=4):
+    rng = np.random.default_rng(seed)
+    net, jobs = random_instance(rng, num_jobs=num_jobs)
+    return net, J.batch_jobs(jobs)
+
+
+def test_builtin_solvers_registered():
+    assert set(available_solvers()) >= {"greedy", "lazy", "sa", "exact"}
+
+
+@pytest.mark.parametrize("method", ["greedy", "lazy", "sa", "exact"])
+def test_solve_returns_plan_for_every_method(method):
+    net, batch = _instance(0, num_jobs=3)
+    opts = {"d": 0.9, "num_chains": 1} if method == "sa" else {}
+    plan = solve(net, batch, method=method, **opts)
+    assert isinstance(plan, Plan)
+    assert plan.solver == method
+    assert plan.meta["method"] == method
+    assert plan.meta["solve_s"] >= 0
+    assert plan.assign.shape == (batch.num_jobs, batch.max_layers)
+    assert sorted(plan.priority.tolist()) == list(range(batch.num_jobs))
+    assert np.all(plan.bounds > 0)
+
+
+def test_unknown_method_raises():
+    net, batch = _instance(1)
+    with pytest.raises(ValueError, match="unknown solver"):
+        solve(net, batch, method="nope")
+
+
+def test_custom_solver_registration():
+    @register_solver("_const_test")
+    def const(net, batch, **opts):
+        base = solvers.get("greedy")(net, batch)
+        return Plan(assign=base.assign, priority=base.priority,
+                    bounds=base.bounds, solver="_const_test")
+
+    try:
+        net, batch = _instance(2)
+        plan = solve(net, batch, method="_const_test")
+        assert plan.solver == "_const_test"
+    finally:
+        solvers._REGISTRY.pop("_const_test", None)
+
+
+def test_json_round_trip_lossless():
+    net, batch = _instance(3)
+    for method in ("greedy", "sa"):
+        opts = {"d": 0.9, "num_chains": 1} if method == "sa" else {}
+        plan = solve(net, batch, method=method, **opts)
+        rt = Plan.from_dict(json.loads(json.dumps(plan.to_dict())))
+        np.testing.assert_array_equal(rt.assign, plan.assign)
+        np.testing.assert_array_equal(rt.priority, plan.priority)
+        assert rt.bounds.tolist() == plan.bounds.tolist()  # bit-exact f64
+        assert rt.solver == plan.solver
+        if plan.net is not None:
+            np.testing.assert_array_equal(np.asarray(rt.net.q_node),
+                                          np.asarray(plan.net.q_node))
+            np.testing.assert_array_equal(np.asarray(rt.net.q_link),
+                                          np.asarray(plan.net.q_link))
+        if plan.paths is not None:
+            assert rt.paths == plan.paths
+
+
+def test_greedy_and_lazy_bounds_identical():
+    """Lazy greedy IS Algorithm 1 (up to ties): same bounds, fewer routings."""
+    for seed in range(3):
+        net, batch = _instance(seed + 10, num_jobs=5)
+        g = solve(net, batch, method="greedy")
+        l = solve(net, batch, method="lazy")
+        np.testing.assert_allclose(l.bound(), g.bound(), rtol=1e-6)
+        assert l.meta["n_routings"] <= g.meta["n_routings"]
+
+
+def test_simulate_le_bound_randomized():
+    """Plan.simulate <= Plan.bound on randomized instances (§III-B)."""
+    for seed in range(8):
+        net, batch = _instance(seed + 50, num_jobs=3)
+        plan = solve(net, batch, method="greedy")
+        if plan.bound() >= 1e29:
+            continue
+        sim = plan.simulate(net, batch)
+        assert sim.makespan <= plan.bound() * (1 + 1e-5)
+
+
+def test_exact_never_worse_than_greedy():
+    for seed in range(2):
+        net, batch = _instance(seed + 80, num_jobs=3)
+        g = solve(net, batch, method="greedy")
+        e = solve(net, batch, method="exact")
+        assert e.bound() <= g.bound() * (1 + 1e-5)
+
+
+def test_plan_order_priority_inverse():
+    net, batch = _instance(7)
+    plan = solve(net, batch, method="greedy")
+    order = plan.order
+    assert sorted(order.tolist()) == list(range(batch.num_jobs))
+    np.testing.assert_array_equal(plan.priority[order],
+                                  np.arange(batch.num_jobs))
+
+
+def test_replay_reproduces_bounds_and_enriches():
+    net, batch = _instance(8)
+    plan = solve(net, batch, method="greedy")
+    rp = plan.replay(net, batch)
+    np.testing.assert_allclose(rp.bounds, plan.bounds, rtol=1e-4)
+    assert rp.paths is not None and len(rp.paths) == batch.num_jobs
+    # simulate() picks up the stored paths
+    sim = rp.simulate(net, batch)
+    assert sim.makespan <= rp.bound() * (1 + 1e-5)
+
+
+def test_plan_validates_priority_permutation():
+    with pytest.raises(ValueError, match="permutation"):
+        Plan(assign=np.zeros((2, 1), np.int32),
+             priority=np.array([0, 0], np.int32),
+             bounds=np.ones((2,)))
+
+
+def test_commit_matches_stored_net():
+    net, batch = _instance(9)
+    plan = solve(net, batch, method="greedy")
+    final = plan.commit(net, batch)
+    np.testing.assert_allclose(np.asarray(final.q_node),
+                               np.asarray(plan.net.q_node), rtol=1e-4)

@@ -23,10 +23,55 @@ def test_placements_valid_and_prioritized():
     reqs = [Request("smollm_135m", src=0, dst=5, seq_len=1024, name=f"r{i}")
             for i in range(4)]
     plans = sched.schedule(reqs)
+    # regression: the list is built in priority order (no re-sort needed)
     assert [p.priority for p in plans] == [0, 1, 2, 3]
     for p in plans:
         assert all(n in (1, 2, 3, 4) for n in p.nodes_used)
         assert p.bound_s > 0
+
+
+def test_placements_are_views_over_stored_plan():
+    """Placements share the scheduler's stored Plan; bounds agree and the
+    plan round-trips through JSON with the placements' data intact."""
+    import json
+    from repro.core.plan import Plan
+
+    sched = RoutedScheduler(_cluster())
+    plans = sched.schedule([Request("smollm_135m", 0, 5, name=f"r{i}")
+                            for i in range(3)])
+    stored = sched.last_plan
+    assert stored is not None and stored.solver == "greedy"
+    for p in plans:
+        assert p.plan is stored
+        assert p.bound_s == float(stored.bounds[p.job])
+    rt = Plan.from_dict(json.loads(json.dumps(stored.to_dict())))
+    np.testing.assert_array_equal(rt.assign, stored.assign)
+    np.testing.assert_array_equal(rt.priority, stored.priority)
+
+
+def test_scheduler_method_flag():
+    """Solver choice is a string flag; lazy greedy places identically."""
+    reqs = [Request("smollm_135m", 0, 5, name=f"r{i}") for i in range(3)]
+    by_method = {}
+    for method in ("greedy", "lazy"):
+        sched = RoutedScheduler(_cluster(), method=method)
+        sched.schedule(reqs)
+        by_method[method] = sched.last_plan
+    np.testing.assert_allclose(by_method["greedy"].bounds,
+                               by_method["lazy"].bounds, rtol=1e-6)
+
+
+def test_replan_last_routes_around_straggler():
+    """report_slowdown + replan_last re-places the same batch."""
+    sched = RoutedScheduler(_cluster())
+    plans = sched.schedule([Request("olmo_1b", 0, 5, name=f"r{i}")
+                            for i in range(2)])
+    victim = plans[0].nodes_used[0]
+    sched.report_slowdown(victim, 50.0)
+    replans = sched.replan_last()
+    assert replans is not None and len(replans) == 2
+    for p in replans:
+        assert victim not in p.nodes_used, (victim, p.nodes_used)
 
 
 def test_queue_aware_spreading():

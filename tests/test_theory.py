@@ -1,7 +1,7 @@
 """Theorem 1 (total unimodularity) and Theorem 2 (approximation ratio)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (bounds, exact, greedy, jobs as J, layered_graph,
                         network as N, schedule)
@@ -34,26 +34,6 @@ def test_b2_is_unit_flow():
     assert sorted(np.unique(ilp.b2)) in ([-1.0, 0.0, 1.0], [-1.0, 1.0])
 
 
-def _brute_force_tstar(net, batch):
-    """Enumerate assignments x priorities on a tiny instance, simulate."""
-    import itertools
-    mu = np.asarray(net.mu_node)
-    comp_nodes = np.nonzero(mu > 0)[0]
-    Js = batch.num_jobs
-    Ls = [int(batch.num_layers[j]) for j in range(Js)]
-    best = np.inf
-    for assigns in itertools.product(
-            *[itertools.product(comp_nodes, repeat=Ls[j]) for j in range(Js)]):
-        a = np.zeros((Js, batch.max_layers), np.int32)
-        for j in range(Js):
-            a[j, :Ls[j]] = assigns[j]
-            a[j, Ls[j]:] = assigns[j][-1] if Ls[j] else 0
-        for perm in itertools.permutations(range(Js)):
-            sim = schedule.simulate(net, batch, a, np.asarray(perm))
-            best = min(best, sim.makespan)
-    return best
-
-
 def test_theorem2_alpha_bound_tiny():
     """Greedy completion <= alpha * T* on a brute-forced tiny instance."""
     G = 1.0
@@ -67,8 +47,8 @@ def test_theorem2_alpha_bound_tiny():
     ]
     batch = J.batch_jobs(jobs)
     sol = greedy.greedy_route(net, batch)
-    sim = schedule.simulate(net, batch, sol.assign, sol.order)
-    tstar = _brute_force_tstar(net, batch)
+    sim = sol.simulate(net, batch)
+    tstar = exact.brute_force_makespan(net, batch)
     a = bounds.alpha(net, jobs)
     assert sim.makespan <= a * tstar * (1 + 1e-6), (sim.makespan, a, tstar)
     assert sol.makespan_bound <= a * tstar * (1 + 1e-6)
@@ -87,8 +67,8 @@ def test_corollary1_zero_delay_identical_caps():
             for i in range(3)]
     batch = J.batch_jobs(jobs)
     sol = greedy.greedy_route(net, batch)
-    sim = schedule.simulate(net, batch, sol.assign, sol.order)
-    tstar = _brute_force_tstar(net, batch)
+    sim = sol.simulate(net, batch)
+    tstar = exact.brute_force_makespan(net, batch)
     factor = bounds.corollary1_factor(net)
     assert sim.makespan <= factor * tstar * (1 + 1e-6)
 
