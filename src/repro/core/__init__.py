@@ -8,6 +8,8 @@ from .network import (ComputeNetwork, INF, make_network, small_topology,
 from .jobs import InferenceJob, JobBatch, batch_jobs, synthetic_job
 from .routing import (Route, route_single, route_batch,
                       cost_given_assignment, commit_assignment)
+from .shortest_path import (Closures, build_closures, build_closures_batch,
+                            closure_build_count, reset_closure_build_count)
 from .plan import Plan
 from .solvers import Solver, solve, register as register_solver, \
     available as available_solvers
@@ -21,6 +23,8 @@ __all__ = [
     "InferenceJob", "JobBatch", "batch_jobs", "synthetic_job",
     "Route", "route_single", "route_batch", "cost_given_assignment",
     "commit_assignment",
+    "Closures", "build_closures", "build_closures_batch",
+    "closure_build_count", "reset_closure_build_count",
     "Plan", "Solver", "solve", "register_solver", "available_solvers",
     "GreedySolution", "greedy_route",  # deprecated alias + legacy name
     "SAResult", "anneal", "evaluate_solution",

@@ -27,6 +27,7 @@ from .network import ComputeNetwork
 from .jobs import JobBatch
 from .plan import Plan
 from . import routing
+from .shortest_path import closures_for
 
 # Deprecated alias (one release): anneal now returns the canonical Plan.
 # NB the old SAResult.priority was slot->job, i.e. the new ``Plan.order``;
@@ -37,14 +38,22 @@ SAResult = Plan
 
 def evaluate_solution(net: ComputeNetwork, batch: JobBatch, assign: jax.Array,
                       prio: jax.Array) -> jax.Array:
-    """Fictitious-system makespan bound of a full solution."""
+    """Fictitious-system makespan bound of a full solution.
+
+    Each replay step builds the job's closure stack once and shares it
+    between the cost evaluation and the queue commit (the two used to
+    recompute it independently — this evaluator is SA's inner loop, so the
+    closure work halves).
+    """
 
     def step(cur, p):
         j = prio[p]
         args = (batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
                 batch.num_layers[j])
-        cost = routing.cost_given_assignment(cur, *args, assign[j])
-        cur = routing.commit_assignment(cur, *args, assign[j])
+        cl = closures_for(cur, batch.data[j])
+        cost = routing.cost_given_assignment(cur, *args, assign[j],
+                                             closures=cl)
+        cur = routing.commit_assignment(cur, *args, assign[j], closures=cl)
         return cur, cost
 
     _, costs = jax.lax.scan(step, net, jnp.arange(batch.num_jobs))

@@ -120,7 +120,7 @@ def exact_plan(net: ComputeNetwork, batch: JobBatch, *,
     Exponential in both J and |V_p|; intended for oracle checks on tiny
     instances (J <= ~6, V <= ~14).
     """
-    from . import routing
+    from . import routing, shortest_path as SP
 
     J = batch.num_jobs
     if J > max_jobs:
@@ -150,7 +150,8 @@ def exact_plan(net: ComputeNetwork, batch: JobBatch, *,
                 assign[j, L:] = a[-1]
             cur = routing.commit_assignment(
                 cur, batch.comp[j], batch.data[j], batch.src[j],
-                batch.dst[j], batch.num_layers[j], assign[j])
+                batch.dst[j], batch.num_layers[j], assign[j],
+                closures=SP.build_closures(cur, batch.data[j]))
             if bounds[j] >= best_mk:
                 break  # this order can't beat the incumbent
         else:

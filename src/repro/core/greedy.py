@@ -1,9 +1,12 @@
 """Algorithm 1: greedy multi-job routing.
 
-Each round routes *every* unrouted job optimally against the current queue
-state (a vmapped batch of single-job DPs -> one batched stack of min-plus
-closures, the kernel hot-spot), gives the earliest-finishing job the next
-priority slot, and commits its load to the queues (Alg. 1 line 3).
+Each round builds the batched closure stack **once** for the current queue
+state (``shortest_path.build_closures_batch`` — jobs sharing a data-size
+vector dedupe to one closure; the kernel hot-spot), routes every unrouted
+job against it (a vmapped batch of single-job DPs), gives the
+earliest-finishing job the next priority slot, and commits its load to the
+queues (Alg. 1 line 3) *reusing the same closures* — no recomputation
+between routing and commit.
 
 The round body is jit-compiled once per (J, Lmax, V) shape; the J-round loop
 runs in Python so solutions stream out incrementally (and J is small next to
@@ -21,6 +24,7 @@ from .network import INF, ComputeNetwork
 from .jobs import JobBatch
 from .plan import Plan
 from . import routing
+from . import shortest_path as SP
 
 # Deprecated alias (one release): greedy now returns the canonical Plan.
 GreedySolution = Plan
@@ -28,20 +32,31 @@ GreedySolution = Plan
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def _round(net: ComputeNetwork, batch: JobBatch, routed: jax.Array,
+           closures: SP.Closures | None = None,
            *, use_pallas: bool | None = None):
-    r = routing.route_batch(net, batch, use_pallas=use_pallas)
-    costs = jnp.where(routed, INF, r.cost)
+    r = routing.route_batch(net, batch, closures=closures,
+                            use_pallas=use_pallas)
+    # Mask routed jobs with true inf, not the finite INF sentinel: an
+    # unroutable job's cost clips to exactly INF and would tie with (and at
+    # a lower index, win over) the mask, double-committing a routed job.
+    costs = jnp.where(routed, jnp.inf, r.cost)
     j = jnp.argmin(costs).astype(jnp.int32)
+    cl_j = None if closures is None else closures.job(j)
     net2 = routing.commit_assignment(
         net, batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
-        batch.num_layers[j], r.assign[j])
+        batch.num_layers[j], r.assign[j], closures=cl_j)
     return j, r.cost[j], r.assign[j], net2
 
 
 def greedy_route(net: ComputeNetwork, batch: JobBatch,
                  *, use_pallas: bool | None = None,
-                 lazy: bool = False) -> Plan:
+                 lazy: bool = False, share_closures: bool = True) -> Plan:
     """Run Algorithm 1 to completion.
+
+    ``share_closures=True`` (default) builds one batched closure stack per
+    round and shares it between routing and commit; ``False`` reproduces the
+    seed behavior (every routing/commit call rebuilds its own closures) —
+    kept for benchmarking the reuse win, not for production use.
 
     ``lazy=True`` is the beyond-paper *lazy greedy* (EXPERIMENTS.md §Perf):
     queues only grow, so every job's completion bound is monotone
@@ -52,15 +67,21 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
     (it IS Algorithm 1 up to tie-breaking).
     """
     if lazy:
-        return _greedy_lazy(net, batch, use_pallas=use_pallas)
+        return _greedy_lazy(net, batch, use_pallas=use_pallas,
+                            share_closures=share_closures)
     J, lmax = batch.num_jobs, batch.max_layers
     routed = jnp.zeros((J,), bool)
     order = np.zeros((J,), np.int32)
     assign = np.zeros((J, lmax), np.int32)
     bounds = np.zeros((J,), np.float64)
     cur = net
+    dedupe = SP.dedupe_data(batch) if share_closures else None
     for p in range(J):
-        j, cost, a, cur = _round(cur, batch, routed, use_pallas=use_pallas)
+        closures = (SP.build_closures_batch(cur, batch, dedupe=dedupe,
+                                            use_pallas=use_pallas)
+                    if share_closures else None)
+        j, cost, a, cur = _round(cur, batch, routed, closures,
+                                 use_pallas=use_pallas)
         j = int(j)
         order[p] = j
         bounds[j] = float(cost)
@@ -71,49 +92,69 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
-def _route_one(net, batch, j, *, use_pallas=None):
+def _route_one(net, batch, j, closures=None, *, use_pallas=None):
+    cl = None if closures is None else closures.job(j)
     r = routing.route_single(net, batch.comp[j], batch.data[j], batch.src[j],
-                             batch.dst[j], batch.num_layers[j],
+                             batch.dst[j], batch.num_layers[j], closures=cl,
                              use_pallas=use_pallas)
     return r.cost, r.assign
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
-def _commit_one(net, batch, j, assign, *, use_pallas=None):
+def _commit_one(net, batch, j, assign, closures=None, *, use_pallas=None):
+    cl = None if closures is None else closures.job(j)
     return routing.commit_assignment(
         net, batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
-        batch.num_layers[j], jnp.asarray(assign))
+        batch.num_layers[j], jnp.asarray(assign), closures=cl)
 
 
 def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
-                 *, use_pallas: bool | None = None) -> Plan:
+                 *, use_pallas: bool | None = None,
+                 share_closures: bool = True) -> Plan:
     J, lmax = batch.num_jobs, batch.max_layers
-    r0 = routing.route_batch(net, batch, use_pallas=use_pallas)
-    cost = np.array(r0.cost, np.float64)             # cached lower bounds
-    assign_c = np.array(r0.assign)                   # (writable copies)
+    dedupe = SP.dedupe_data(batch) if share_closures else None
+
+    def fresh_closures(n):
+        return (SP.build_closures_batch(n, batch, dedupe=dedupe,
+                                        use_pallas=use_pallas)
+                if share_closures else None)
+
+    closures = fresh_closures(net)
+    r0 = routing.route_batch(net, batch, closures=closures,
+                             use_pallas=use_pallas)
+    # Cached lower bounds stay on device; selection is a device argmin over
+    # the masked vector (one scalar transfer per probe, no J-wide ping-pong).
+    cost = jnp.asarray(r0.cost)                      # [J] cached lower bounds
+    assign_c = np.array(r0.assign)                   # (writable host copy)
     fresh = np.ones((J,), bool)
+    active = jnp.ones((J,), bool)
 
     order = np.zeros((J,), np.int32)
     assign = np.zeros((J, lmax), np.int32)
     bounds = np.zeros((J,), np.float64)
-    remaining = set(range(J))
     cur = net
     n_routings = J
     for p in range(J):
         while True:
-            j = min(remaining, key=lambda x: cost[x])
+            # inf (not the finite INF sentinel) so routed jobs can never tie
+            # with an unroutable active job's clipped-to-INF bound
+            j = int(jnp.argmin(jnp.where(active, cost, jnp.inf)))
             if fresh[j]:
                 break
-            c, a = _route_one(cur, batch, j, use_pallas=use_pallas)
-            cost[j], assign_c[j] = float(c), np.asarray(a)
+            c, a = _route_one(cur, batch, j, closures, use_pallas=use_pallas)
+            cost = cost.at[j].set(c)
+            assign_c[j] = np.asarray(a)
             fresh[j] = True
             n_routings += 1
         order[p] = j
-        bounds[j] = cost[j]
+        bounds[j] = float(cost[j])
         assign[j] = assign_c[j]
-        remaining.discard(j)
-        cur = _commit_one(cur, batch, j, assign_c[j], use_pallas=use_pallas)
-        for x in remaining:
-            fresh[x] = False
+        active = active.at[j].set(False)
+        cur = _commit_one(cur, batch, j, assign_c[j], closures,
+                          use_pallas=use_pallas)
+        if p + 1 < J:
+            closures = fresh_closures(cur)
+            fresh[:] = False
+            fresh[j] = True  # routed jobs are never probed again
     return Plan.from_order(assign, order, bounds, solver="lazy",
                            meta={"n_routings": n_routings}, net=cur)

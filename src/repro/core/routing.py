@@ -37,7 +37,8 @@ import jax.numpy as jnp
 
 from .network import INF, ComputeNetwork, node_invrate, node_wait
 from .jobs import JobBatch
-from .shortest_path import layer_edge_weights, transfer_closure, reconstruct_path
+from .shortest_path import (Closures, closures_for, layer_edge_weights,
+                            transfer_closure, reconstruct_path)
 
 
 @jax.tree_util.register_dataclass
@@ -89,33 +90,47 @@ def _dp(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def route_single(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
                  src: jax.Array, dst: jax.Array, num_layers: jax.Array,
-                 *, use_pallas: bool | None = None) -> Route:
-    """Optimally route one job (paper formulation (1)-(5)) given queues in ``net``."""
-    t = transfer_closure(net, data, use_pallas=use_pallas)
-    return _dp(t, comp, src, dst, num_layers, node_invrate(net), node_wait(net))
+                 *, closures: Closures | None = None,
+                 use_pallas: bool | None = None) -> Route:
+    """Optimally route one job (paper formulation (1)-(5)) given queues in ``net``.
+
+    ``closures`` (if given) must have been built against this same
+    (net, data) — pass it to share one closure stack across routing, commit,
+    and path extraction instead of rebuilding it here.
+    """
+    if closures is None:
+        closures = closures_for(net, data, use_pallas=use_pallas)
+    return _dp(closures.t, comp, src, dst, num_layers, node_invrate(net),
+               node_wait(net))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def route_batch(net: ComputeNetwork, batch: JobBatch,
-                *, use_pallas: bool | None = None) -> Route:
-    """vmap of :func:`route_single` over a padded job batch (shared queues)."""
-    fn = lambda c, d, s, t_, n: route_single(
-        net, c, d, s, t_, n, use_pallas=use_pallas)
+                *, closures: Closures | None = None,
+                use_pallas: bool | None = None) -> Route:
+    """vmap of :func:`route_single` over a padded job batch (shared queues).
+
+    ``closures``: optional [J, ...]-stacked artifact from
+    ``shortest_path.build_closures_batch`` (vmapped through per job).
+    """
+    fn = lambda c, d, s, t_, n, cl: route_single(
+        net, c, d, s, t_, n, closures=cl, use_pallas=use_pallas)
     return jax.vmap(fn)(batch.comp, batch.data, batch.src, batch.dst,
-                        batch.num_layers)
+                        batch.num_layers, closures)
 
 
 @jax.jit
 def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
                           src: jax.Array, dst: jax.Array, num_layers: jax.Array,
-                          assign: jax.Array) -> jax.Array:
+                          assign: jax.Array,
+                          *, closures: Closures | None = None) -> jax.Array:
     """Objective (1) for a *fixed* compute-node assignment (paths free).
 
     Transfers between consecutive compute nodes take min-cost paths under the
     current queues; node waits are charged once per consecutive run.  Used by
     the simulated-annealing evaluator.
     """
-    t = transfer_closure(net, data)
+    t = transfer_closure(net, data) if closures is None else closures.t
     cinv = node_invrate(net)
     nw = node_wait(net)
     lmax = comp.shape[0]
@@ -143,16 +158,21 @@ def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
 @jax.jit
 def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
                       src: jax.Array, dst: jax.Array, num_layers: jax.Array,
-                      assign: jax.Array) -> ComputeNetwork:
+                      assign: jax.Array,
+                      *, closures: Closures | None = None) -> ComputeNetwork:
     """Algorithm 1 line 3: add the routed job's load to the queues.
 
     q_node[a_l] += c_l for each real layer l; q_link[u, v] += d_l for every
     hop of the min-cost path carrying layer-l output (l = 0..L, with node_0 =
-    src and node_{L+1} = dst).
+    src and node_{L+1} = dst).  Pass ``closures`` to reuse the caller's
+    (w, t) stack instead of recomputing both here.
     """
     v = net.num_nodes
-    w = layer_edge_weights(net, data)           # [Lmax+1, V, V]
-    t = transfer_closure(net, data)
+    if closures is None:
+        closures = closures_for(net, data)
+    t = closures.t                              # [Lmax+1, V, V]
+    w = (layer_edge_weights(net, data) if closures.w is None
+         else closures.w)                       # cheap when absent
     lmax = comp.shape[0]
 
     q_node = net.q_node
@@ -183,8 +203,46 @@ def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
     return net.with_queues(q_node, q_link)
 
 
-def extract_paths(net: ComputeNetwork, comp, data, src, dst, num_layers, assign):
-    """Host-side helper: explicit per-layer hop lists for the event simulator."""
+@functools.partial(jax.jit, static_argnames=("max_hops",))
+def _paths_device(w: jax.Array, t: jax.Array, starts: jax.Array,
+                  ends: jax.Array, *, max_hops: int) -> jax.Array:
+    """vmap of :func:`reconstruct_path` over the layer axis -> [L+1, max_hops, 2]."""
+    fn = functools.partial(reconstruct_path, max_hops=max_hops)
+    return jax.vmap(fn)(w, t, starts, ends)
+
+
+def extract_paths(net: ComputeNetwork, comp, data, src, dst, num_layers,
+                  assign, *, closures: Closures | None = None):
+    """Host-side helper: explicit per-layer hop lists for the event simulator.
+
+    One vmapped ``reconstruct_path`` over all L+1 layers and a single
+    ``device_get`` (the seed's per-hop host loop is kept as
+    :func:`extract_paths_ref` for parity testing).
+    """
+    import numpy as np
+    v = net.num_nodes
+    if closures is None:
+        closures = closures_for(net, data)
+    w = (layer_edge_weights(net, data) if closures.w is None
+         else closures.w)
+    L = int(num_layers)
+    assign_h = np.asarray(jax.device_get(assign))
+    nodes = np.array([int(src)] + [int(assign_h[l]) for l in range(L)]
+                     + [int(dst)], np.int32)
+    hops = jax.device_get(_paths_device(
+        w[: L + 1], closures.t[: L + 1],
+        jnp.asarray(nodes[:-1]), jnp.asarray(nodes[1:]), max_hops=v))
+    paths = []
+    for l in range(L + 1):
+        layer = hops[l]
+        n_real = int((layer[:, 0] >= 0).sum())
+        paths.append([(int(u), int(vv)) for u, vv in layer[:n_real]])
+    return paths
+
+
+def extract_paths_ref(net: ComputeNetwork, comp, data, src, dst, num_layers,
+                      assign):
+    """Reference per-hop host loop (seed implementation) for parity tests."""
     import numpy as np
     v = net.num_nodes
     w = jax.device_get(layer_edge_weights(net, data))

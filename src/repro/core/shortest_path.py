@@ -8,37 +8,144 @@ For layer l, every intra-layer edge (u, v) of the layered graph costs
 cheapest way to move layer-l output from u to v (possibly multi-hop).  It is
 the min-plus closure of w_l, the kernel hot-spot (see kernels/minplus.py).
 
-``reconstruct_hop`` recovers an explicit hop from the closure: from u toward
-v, the next hop is argmin_w  w_l(u, w) + T[l, w, v].  Walking this greedy
-next-hop V-1 times yields a shortest path; it is used to commit link loads in
-the greedy algorithm and to hand explicit paths to the event simulator.
+:class:`Closures` bundles (w, T) for one (net, data) so the stack is built
+**once** per queue state and shared by everything that needs it — routing,
+commit, cost evaluation, path extraction.  ``build_closures`` /
+``build_closures_batch`` are the counted host-level builders (the greedy
+driver calls them once per round; ``closure_build_count`` powers the
+regression test asserting exactly that); ``closures_for`` is the uncounted
+pure builder safe to call under jit/scan tracing.
+
+``reconstruct_path`` recovers an explicit hop list from the closure: from u
+toward v, the next hop is argmin_w  w_l(u, w) + T[l, w, v].  Walking this
+greedy next-hop V-1 times yields a shortest path; it is used to commit link
+loads in the greedy algorithm and to hand explicit paths to the event
+simulator.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 from .network import INF, ComputeNetwork, link_invrate, link_wait
 
 
-def layer_edge_weights(net: ComputeNetwork, data_sizes: jax.Array) -> jax.Array:
-    """[L+1, V, V] per-layer intra-layer edge weights.
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Closures:
+    """Per-layer edge weights and their min-plus closures for one queue state.
 
-    data_sizes: [L+1] bytes (d_0 .. d_L). Absent edges get INF; the diagonal
-    is 0 (staying put is free).
+    ``w``/``t`` are [Lmax+1, V, V] for a single data-size vector, or carry a
+    leading [J] axis when built for a batch (``build_closures_batch``); the
+    batched stack vmaps straight through ``route_single``.
+
+    ``w`` may be ``None``: it is elementwise-cheap to recompute from
+    (net, data), so batch-stacked artifacts omit it rather than materialize
+    a J-fold gather that only ever serves one job's commit — consumers that
+    need ``w`` (commit, path extraction) rebuild it from the job's data when
+    absent.  ``t`` — the expensive part — is always present.
+    """
+
+    w: jax.Array | None  # layer edge weights w_l(u, v), or None (recompute)
+    t: jax.Array         # min-plus closure T_l = closure(w_l)
+
+    def job(self, j) -> "Closures":
+        """Slice one job's closures out of a batch-stacked artifact."""
+        return Closures(w=None if self.w is None else self.w[j], t=self.t[j])
+
+
+_n_builds = 0
+
+
+def closure_build_count() -> int:
+    """Host-level closure builds since the last reset (one per
+    ``build_closures``/``build_closures_batch`` call; in-jit fallback builds
+    are not counted)."""
+    return _n_builds
+
+
+def reset_closure_build_count() -> None:
+    global _n_builds
+    _n_builds = 0
+
+
+def layer_edge_weights(net: ComputeNetwork, data_sizes: jax.Array) -> jax.Array:
+    """[..., L+1, V, V] per-layer intra-layer edge weights.
+
+    data_sizes: [..., L+1] bytes (d_0 .. d_L; leading batch dims allowed).
+    Absent edges get INF; the diagonal is 0 (staying put is free).
     """
     inv = link_invrate(net)  # [V, V], INF off-graph, 0 diag
     wait = link_wait(net)    # [V, V], 0 diag
-    w = data_sizes[:, None, None] * inv[None] + wait[None]
+    w = data_sizes[..., :, None, None] * inv + wait
     return jnp.minimum(w, INF)
+
+
+def closures_for(net: ComputeNetwork, data_sizes: jax.Array,
+                 *, use_pallas: bool | None = None) -> Closures:
+    """Uncounted :class:`Closures` builder (safe under jit/scan tracing)."""
+    w = layer_edge_weights(net, data_sizes)
+    return Closures(w=w, t=ops.minplus_closure(w, use_pallas=use_pallas))
+
+
+def build_closures(net: ComputeNetwork, data_sizes: jax.Array,
+                   *, use_pallas: bool | None = None) -> Closures:
+    """Counted host-level :class:`Closures` build for one data-size vector."""
+    global _n_builds
+    _n_builds += 1
+    return closures_for(net, data_sizes, use_pallas=use_pallas)
+
+
+def dedupe_data(batch) -> tuple[jax.Array, jax.Array]:
+    """(unique [U, Lmax+1] data rows, [J] inverse index) for a job batch.
+
+    Host-level (needs concrete ``batch.data``); constant across greedy
+    rounds, so drivers hoist it out of the round loop.
+    """
+    data = np.asarray(jax.device_get(batch.data))
+    uniq, inv = np.unique(data, axis=0, return_inverse=True)
+    return jnp.asarray(uniq), jnp.asarray(inv.reshape(-1), jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _closures_gathered(net: ComputeNetwork, uniq: jax.Array, inv: jax.Array,
+                       *, use_pallas: bool | None = None) -> Closures:
+    """One fused program: close the unique stack, gather back to [J, ...].
+
+    Only ``t`` is gathered; ``w`` is dropped (cheap to recompute per job,
+    and gathering it J-fold would double the artifact's footprint).
+    """
+    cl = closures_for(net, uniq, use_pallas=use_pallas)
+    return Closures(w=None, t=cl.t[inv])
+
+
+def build_closures_batch(net: ComputeNetwork, batch,
+                         *, use_pallas: bool | None = None,
+                         dedupe: tuple[jax.Array, jax.Array] | None = None,
+                         ) -> Closures:
+    """[J, Lmax+1, V, V] stacked :class:`Closures` for a job batch.
+
+    Jobs sharing a data-size vector dedupe to a single closure computation:
+    the [U, Lmax+1, V, V] unique stack is closed in one batched kernel call
+    and gathered back to [J, ...].  ``dedupe`` takes a precomputed
+    :func:`dedupe_data` result (it is queue-state independent, so round
+    loops hoist it).  Counted as one build.
+    """
+    global _n_builds
+    _n_builds += 1
+    uniq, inv = dedupe_data(batch) if dedupe is None else dedupe
+    return _closures_gathered(net, uniq, inv, use_pallas=use_pallas)
 
 
 def transfer_closure(net: ComputeNetwork, data_sizes: jax.Array,
                      *, use_pallas: bool | None = None) -> jax.Array:
     """[L+1, V, V] min-cost transfer tensor T_l = closure(w_l)."""
-    w = layer_edge_weights(net, data_sizes)
-    return ops.minplus_closure(w, use_pallas=use_pallas)
+    return closures_for(net, data_sizes, use_pallas=use_pallas).t
 
 
 def reconstruct_path(w: jax.Array, t: jax.Array, src: jax.Array, dst: jax.Array,

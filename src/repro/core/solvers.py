@@ -26,6 +26,7 @@ from typing import Callable, Protocol, runtime_checkable
 from .network import ComputeNetwork
 from .jobs import JobBatch
 from .plan import Plan
+from .shortest_path import closure_build_count
 
 
 @runtime_checkable
@@ -68,10 +69,14 @@ def solve(net: ComputeNetwork, batch: JobBatch, method: str = "greedy",
           **opts) -> Plan:
     """Route a job batch with the named algorithm; always returns a Plan.
 
-    The plan's ``meta`` records the method name and wall-clock solve time
-    (``meta["solve_s"]``) on top of whatever the solver itself reports.
+    The plan's ``meta`` records the method name, wall-clock solve time
+    (``meta["solve_s"]``), and the number of host-level min-plus closure
+    builds the solve triggered (``meta["closure_builds"]`` — the hot-spot
+    metric the closure-reuse pipeline minimizes) on top of whatever the
+    solver itself reports.
     """
     fn = get(method)
+    n0 = closure_build_count()
     t0 = time.perf_counter()
     plan = fn(net, batch, **opts)
     if not isinstance(plan, Plan):
@@ -80,7 +85,8 @@ def solve(net: ComputeNetwork, batch: JobBatch, method: str = "greedy",
     # Fresh meta dict: a solver may return a shared/cached Plan, and the
     # caller's copy must not have its provenance clobbered by later calls.
     meta = {"method": method, **plan.meta,
-            "solve_s": time.perf_counter() - t0}
+            "solve_s": time.perf_counter() - t0,
+            "closure_builds": closure_build_count() - n0}
     return dataclasses.replace(plan, meta=meta)
 
 

@@ -17,6 +17,16 @@ bm, bn are multiples of 128.
 
 Grid: (M/bm, N/bn, K/bk), K innermost (sequential on TPU, so the VMEM
 accumulator carries across K steps of the same (i, j) tile).
+
+Batched variant: the routing pipeline squares whole closure *stacks* —
+``[L+1, V, V]`` (one matrix per DNN layer) or ``[U, L+1, V, V]`` (per
+deduplicated job) — so :func:`minplus_matmul_pallas_batched` adds a leading
+**batch grid dimension**: grid ``(B, M/bm, N/bn, K/bk)`` with block shapes
+``(1, bm, bk)`` / ``(1, bk, bn)`` / ``(1, bm, bn)``.  Each batch element is
+an independent (parallel) slice of the grid reusing the same VMEM
+accumulator discipline; K stays innermost/sequential.  Higher-rank stacks
+are flattened to one batch axis in :mod:`repro.kernels.ops` before reaching
+the kernel.
 """
 from __future__ import annotations
 
@@ -98,6 +108,82 @@ def minplus_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def _minplus_kernel_batched(a_ref, b_ref, o_ref, acc_ref, *, bk: int,
+                            k_steps: int, inner_chunk: int):
+    """One (bm, bn) output tile of one batch element; min-accumulate over K."""
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.float32(3.0e38) / 2)
+
+    a = a_ref[0].astype(jnp.float32)  # [bm, bk]
+    b = b_ref[0].astype(jnp.float32)  # [bk, bn]
+
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, c * inner_chunk, inner_chunk, 1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, c * inner_chunk, inner_chunk, 0)
+        part = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)  # [bm, bn]
+        return jnp.minimum(acc, part)
+
+    acc = acc_ref[...]
+    acc = jax.lax.fori_loop(0, bk // inner_chunk, body, acc)
+    acc_ref[...] = acc
+
+    @pl.when(k_idx == k_steps - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "inner_chunk", "interpret"))
+def minplus_matmul_pallas_batched(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    inner_chunk: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[b] = A[b] (min,+) B[b] for [B, M, K] x [B, K, N] operands.
+
+    The batch axis is the leading (parallel) grid dimension; within a batch
+    element the tiling/accumulator scheme is identical to
+    :func:`minplus_matmul_pallas`.  M, N, K must divide the block sizes —
+    padding and flattening of higher-rank stacks live in
+    :mod:`repro.kernels.ops`.
+    """
+    bsz, m, k = a.shape
+    bsz2, k2, n = b.shape
+    assert bsz == bsz2 and k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (a.shape, b.shape, (bm, bn, bk))
+    assert bk % inner_chunk == 0
+    k_steps = k // bk
+
+    kernel = functools.partial(
+        _minplus_kernel_batched, bk=bk, k_steps=k_steps,
+        inner_chunk=inner_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
         ),
         interpret=interpret,
     )(a, b)

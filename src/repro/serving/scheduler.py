@@ -101,6 +101,20 @@ class RoutedScheduler:
         self._last = None
         self.last_plan = None
 
+    def stats(self) -> dict:
+        """Solve-time/closure-build telemetry of the most recent placement.
+
+        ``closure_builds`` counts host-level min-plus closure builds during
+        the solve — with the round-level reuse pipeline a greedy solve over
+        J jobs reports exactly J (one build per round), so a regression that
+        reintroduces per-call rebuilds shows up here first.
+        """
+        if self.last_plan is None:
+            return {}
+        m = self.last_plan.meta
+        return {k: m[k] for k in ("method", "solve_s", "closure_builds",
+                                  "n_routings") if k in m}
+
     def _effective_net(self) -> N.ComputeNetwork:
         import jax.numpy as jnp
         mu = self.base_net.mu_node / jnp.asarray(self._slowdown)

@@ -93,6 +93,106 @@ def test_batched_ref():
 
 
 # ---------------------------------------------------------------------------
+# Batched Pallas kernel (leading batch grid dimension) + early-exit closure
+# ---------------------------------------------------------------------------
+
+def _inf_sparse(rng, shape, density=0.4):
+    return np.where(rng.random(shape) < density,
+                    rng.uniform(0.1, 5.0, shape), 1e30).astype(np.float32)
+
+
+@pytest.mark.parametrize("b,m,k,n", [(3, 128, 128, 128), (2, 128, 256, 128)])
+def test_batched_kernel_matches_ref(b, m, k, n):
+    from repro.kernels.minplus import minplus_matmul_pallas_batched
+    rng = np.random.default_rng(b * m + n)
+    a = jnp.asarray(_inf_sparse(rng, (b, m, k)))
+    bb = jnp.asarray(_inf_sparse(rng, (b, k, n)))
+    out = minplus_matmul_pallas_batched(a, bb, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.minplus_matmul_ref(a, bb)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_batched_wrapper_random_sparse(seed):
+    """Batched Pallas (forced) == broadcast oracle on INF-sparse stacks with
+    non-multiple-of-block shapes."""
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 4))
+    m, k, n = (int(rng.integers(1, 140)) for _ in range(3))
+    a = jnp.asarray(_inf_sparse(rng, (b, m, k)))
+    bb = jnp.asarray(_inf_sparse(rng, (b, k, n)))
+    out = ops.minplus_matmul(a, bb, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.minplus_matmul_ref(a, bb)),
+                               rtol=1e-6)
+
+
+def test_batched_wrapper_multi_lead_dims():
+    """[J, L+1, V, V] stacks flatten to one batch axis and round-trip."""
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(_inf_sparse(rng, (2, 3, 36, 36)))
+    out = ops.minplus_matmul(a, a, use_pallas=True)
+    assert out.shape == a.shape
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.minplus_matmul_ref(a, a)),
+                               rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_closure_early_exit_matches_unconditional(seed, batched):
+    """The while_loop early exit returns the same fixed point, bit for bit,
+    as the unconditional (n-1).bit_length() squaring loop: the exit only
+    skips squarings that provably reproduce d, so the sequences coincide."""
+    rng = np.random.default_rng(seed)
+    n = 9
+    shape = (3, n, n) if batched else (n, n)
+    w = jnp.asarray(_inf_sparse(rng, shape, density=0.3))
+    got = np.asarray(ops.minplus_closure(w))
+    eye = jnp.arange(n)
+    d = w.at[..., eye, eye].min(0.0)
+    for _ in range((n - 1).bit_length()):
+        d = ops.minplus_matmul(d, d)
+    assert np.array_equal(got, np.asarray(d))
+    # and the fixed point is semantically the true closure
+    np.testing.assert_allclose(got, np.asarray(ref.minplus_closure_ref(w)),
+                               rtol=1e-5)
+
+
+def test_minplus_dispatch_decisions():
+    """Shape -> kernel-path decision table (dispatch introspection)."""
+    # batched [L+1, V, V] stacks with V >= the threshold hit the batched kernel
+    assert ops.minplus_dispatch((9, 256, 256)) == "pallas_batched"
+    assert ops.minplus_dispatch((33, 512, 512)) == "pallas_batched"
+    assert ops.minplus_dispatch((4, 9, 256, 256)) == "pallas_batched"
+    # 2-D operands keep the 2-D kernel
+    assert ops.minplus_dispatch((256, 256)) == "pallas_2d"
+    # small problems stay on the broadcast oracle
+    assert ops.minplus_dispatch((9, 64, 64)) == "oracle"
+    assert ops.minplus_dispatch((64, 64)) == "oracle"
+    # mismatched leading batch dims always fall back to the oracle
+    assert ops.minplus_dispatch((2, 256, 256), (3, 256, 256)) == "oracle"
+    # forcing overrides the size threshold, not the structure
+    assert ops.minplus_dispatch((3, 8, 8), use_pallas=True) == "pallas_batched"
+    assert ops.minplus_dispatch((256, 256), use_pallas=False) == "oracle"
+
+
+def test_closure_traces_through_batched_kernel():
+    """A batched closure actually reaches the batched Pallas kernel (counted
+    at trace time via the dispatch tally)."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(_inf_sparse(rng, (3, 40, 40)))
+    ops.reset_dispatch_counts()
+    got = ops.minplus_closure(w, use_pallas=True)
+    assert ops.dispatch_counts().get("pallas_batched", 0) >= 1
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.minplus_closure_ref(w)),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention kernels (kernels/flash.py)
 # ---------------------------------------------------------------------------
 
