@@ -42,15 +42,9 @@ import numpy as np
 
 from repro.kernels import ops
 
-# Pre-change reference: greedy bounds on examples/quickstart.py's instance
-# (small_topology(1e-3), 2 VGG19 + 6 ResNet34, rng(0)), captured from the
-# seed solver.  The reuse pipeline must reproduce these bit-for-bit.
-QUICKSTART_BOUNDS = [
-    0.9737289547920227, 2.1123697757720947, 0.7822328209877014,
-    0.17777971923351288, 0.17777971923351288, 0.334226131439209,
-    0.25363287329673767, 0.5179324150085449,
-]
-QUICKSTART_ORDER = [3, 4, 6, 5, 7, 2, 0, 1]
+# Pre-change quickstart reference (shared with online_bench's
+# static-identity gate): see benchmarks/common.py.
+from benchmarks.common import QUICKSTART_BOUNDS, QUICKSTART_ORDER
 
 
 # v5e roofline constants (same convention as kernel_bench.py): the (min,+)

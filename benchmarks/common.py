@@ -17,6 +17,26 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return out, (time.time() - t0) / repeat
 
 
+# Pre-change reference: greedy bounds/order on examples/quickstart.py's
+# instance (small_topology(1e-3), 2 VGG19 + 6 ResNet34, rng(0)), captured
+# from the seed solver.  Every refactor of the static path must reproduce
+# these bit-for-bit (closure_bench + online_bench gate on them).
+QUICKSTART_BOUNDS = [
+    0.9737289547920227, 2.1123697757720947, 0.7822328209877014,
+    0.17777971923351288, 0.17777971923351288, 0.334226131439209,
+    0.25363287329673767, 0.5179324150085449,
+]
+QUICKSTART_ORDER = [3, 4, 6, 5, 7, 2, 0, 1]
+
+
+def quickstart_instance():
+    """(net, batch) of the quickstart reference instance."""
+    from repro.core import network as N
+
+    net, _ = N.small_topology(capacity_scale=1e-3)
+    return net, J.batch_jobs(paper_jobs_small(seed=0))
+
+
 def paper_jobs_small(seed: int) -> list:
     """§V small topology: 2 VGG19 + 6 ResNet34, random src-dst."""
     rng = np.random.default_rng(seed)

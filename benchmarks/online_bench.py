@@ -1,0 +1,124 @@
+"""Online serving benchmark: latency/backlog vs offered load, drain vs no-drain.
+
+  PYTHONPATH=src python benchmarks/online_bench.py [--smoke] [--out PATH]
+
+For each scenario x offered-load factor, drives a sub-capacity Poisson
+arrival stream through the online loop twice — with queue draining (the
+time-aware scheduler) and without (the legacy commit-only loop) — and
+records p50/p99 latency bounds and the backlog trajectory.  The headline
+flags in ``BENCH_online.json``:
+
+  * ``drain_bounded``    — the draining run's peak backlog is flat over the
+                           run's second half (growth <= 1.3x),
+  * ``nodrain_diverges`` — the no-drain run keeps climbing (>= 1.5x),
+  * ``static_bounds_match`` — the static greedy path still reproduces the
+                           pre-split quickstart bounds bit-for-bit.
+
+``--smoke`` (2 scenarios, short streams) is the CI regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / "src"))
+
+import numpy as np
+
+SMOKE_SCENARIOS = ["star", "edge-cloud:synthetic"]
+FULL_SCENARIOS = ["star", "random-geometric", "edge-cloud:synthetic",
+                  "paper-small"]
+
+DRAIN_BOUNDED_MAX_GROWTH = 1.3
+NODRAIN_MIN_GROWTH = 1.5
+
+
+def _static_bounds_match() -> bool:
+    """Quickstart greedy bounds, bit-compared against the pre-split record."""
+    from repro.core import solve
+    from benchmarks.common import (QUICKSTART_BOUNDS, QUICKSTART_ORDER,
+                                   quickstart_instance)
+
+    net, batch = quickstart_instance()
+    plan = solve(net, batch, method="greedy")
+    return (plan.bounds.tolist() == QUICKSTART_BOUNDS
+            and plan.order.tolist() == QUICKSTART_ORDER)
+
+
+def run(*, smoke: bool = False, arrivals: int = 80, seed: int = 1,
+        loads: tuple[float, ...] = (0.3, 0.6, 0.9),
+        verbose: bool = True) -> list[dict]:
+    from repro.scenarios import make_scenario
+    from repro.serving.online import run_online
+
+    scenarios = SMOKE_SCENARIOS if smoke else FULL_SCENARIOS
+    if smoke:
+        arrivals = min(arrivals, 40)
+        loads = (0.4, 0.8)
+    rows = []
+    for name in scenarios:
+        sc = make_scenario(name, seed=0)
+        for load in loads:
+            rate = sc.nominal_rate(load)
+            horizon = arrivals / rate
+            row = {"scenario": sc.name, "load": load, "rate_per_s": rate,
+                   "mean_service_s": sc.mean_service_s}
+            for mode, drain in (("drain", True), ("nodrain", False)):
+                tr = run_online(sc, horizon=horizon, seed=seed, rate=rate,
+                                drain_queues=drain)
+                s = tr.summary()
+                row[mode] = s
+            row["drain_bounded"] = (
+                row["drain"]["backlog_growth"] <= DRAIN_BOUNDED_MAX_GROWTH)
+            row["nodrain_diverges"] = (
+                row["nodrain"]["backlog_growth"] >= NODRAIN_MIN_GROWTH)
+            rows.append(row)
+            if verbose:
+                d, nd = row["drain"], row["nodrain"]
+                print(f"{sc.name:28s} load {load:.1f}: "
+                      f"p99 {d['p99_latency_s']:8.3f}s vs {nd['p99_latency_s']:8.3f}s  "
+                      f"backlog growth {d['backlog_growth']:.2f} vs "
+                      f"{nd['backlog_growth']:.2f}  "
+                      f"bounded={row['drain_bounded']} "
+                      f"diverges={row['nodrain_diverges']}", flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny streams, 2 scenarios (the CI gate)")
+    ap.add_argument("--arrivals", type=int, default=80)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent
+                                         / "BENCH_online.json"))
+    args = ap.parse_args()
+
+    rows = run(smoke=args.smoke, arrivals=args.arrivals, seed=args.seed)
+    record = {
+        "benchmark": "online_serving",
+        "smoke": args.smoke,
+        "static_bounds_match": _static_bounds_match(),
+        "rows": rows,
+        "all_drain_bounded": all(r["drain_bounded"] for r in rows),
+        "all_nodrain_diverge": all(r["nodrain_diverges"] for r in rows),
+    }
+    pathlib.Path(args.out).write_text(json.dumps(record, indent=2))
+    print(f"wrote {args.out}")
+    print(f"static_bounds_match={record['static_bounds_match']} "
+          f"all_drain_bounded={record['all_drain_bounded']} "
+          f"all_nodrain_diverge={record['all_nodrain_diverge']}")
+    if not record["static_bounds_match"]:
+        raise SystemExit("static greedy path no longer bit-identical to seed")
+    if args.smoke and not record["all_drain_bounded"]:
+        raise SystemExit("draining scheduler failed to keep backlog bounded")
+    if args.smoke and not record["all_nodrain_diverge"]:
+        raise SystemExit("no-drain baseline unexpectedly stayed bounded")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,7 @@ def main() -> None:
         results.append((name, dt * 1e6, derive(rows)))
 
     from . import bound_gap, fig5_small, fig_large, kernel_bench, \
-        roofline, runtime_scaling, solver_compare
+        online_bench, roofline, runtime_scaling, solver_compare
 
     def _solver_ratio(rows):
         by = {r["method"]: r for r in rows}
@@ -44,6 +44,10 @@ def main() -> None:
 
     bench("solvers", solver_compare.run,
           lambda r: _solver_ratio(r) if r else "n/a")
+    bench("online", lambda: online_bench.run(smoke=True),
+          lambda r: (f"bounded={all(x['drain_bounded'] for x in r)},"
+                     f"diverges={all(x['nodrain_diverges'] for x in r)}")
+          if r else "n/a")
     bench("fig5_small", fig5_small.run,
           lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
     bench("fig_large", fig_large.run,

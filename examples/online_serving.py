@@ -1,0 +1,94 @@
+"""Online serving: an edge-cloud deployment through a diurnal traffic day.
+
+    PYTHONPATH=src python examples/online_serving.py
+
+1. ``scenarios.make_scenario("edge-cloud")`` builds the split-computing
+   deployment: edge sites with thin compute, an aggregation tier, one fat
+   cloud node; LM traffic cost-profiled from the config registry.
+2. A diurnal arrival stream (nonhomogeneous Poisson: quiet at night,
+   peaking mid-day) drives the OnlineScheduler.  Before each batch is
+   solved the queue state is **drained** to the arrival time — committed
+   work has been getting served in the meantime — so backlog tracks the
+   daily load curve instead of ratcheting upward.
+3. Mid-day the cloud node degrades 4x (straggler event on the same clock);
+   the last batch is re-placed against the degraded health, and subsequent
+   placements route cost-optimally around or through it until it recovers
+   in the afternoon.
+"""
+import sys
+import pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import arrivals as A
+from repro.scenarios import make_scenario
+from repro.serving.online import OnlineScheduler
+
+
+def main():
+    sc = make_scenario("edge-cloud", seed=0)
+    cloud = sc.num_nodes - 1
+    print(f"scenario {sc.name}: {sc.num_nodes} nodes "
+          f"({', '.join(sc.node_names)}), traffic '{sc.traffic.name}', "
+          f"mean service {sc.mean_service_s:.2f}s")
+
+    # A compressed "day": diurnal rate between 10% and 45% offered load,
+    # scaled so the day sees ~120 requests.
+    base, peak = sc.nominal_rate(0.10), sc.nominal_rate(0.45)
+    day = 120 / (base + (peak - base) / 2)
+    rng = np.random.default_rng(7)
+    times = A.diurnal_times(rng, base, peak, day, period=day)
+    print(f"diurnal day of {day:,.0f}s, {times.size} arrivals "
+          f"(rate {base:.3g}/s night -> {peak:.3g}/s midday)\n")
+
+    sched = OnlineScheduler(sc.topology, method="greedy")
+    slowdown_at, recover_at = 0.5 * day, 0.7 * day
+    degraded = recovered = False
+    cloud_hits_during_outage = 0
+    for t in times:
+        if not degraded and t >= slowdown_at:
+            sched.report_slowdown(cloud, 4.0, at=slowdown_at)
+            degraded = True
+            replans = sched.replan_last() or []
+            moved = sorted({n for p in replans for n in p.nodes_used})
+            names = [sc.node_names[n] for n in moved]
+            print(f"  [{slowdown_at:9.1f}s] cloud degraded 4x -> last batch "
+                  f"re-placed onto {names} (cost-optimal under the "
+                  f"degraded health, which may still be the cloud)")
+        if degraded and not recovered and t >= recover_at:
+            sched.report_slowdown(cloud, 1.0, at=recover_at)
+            recovered = True
+            print(f"  [{recover_at:9.1f}s] cloud recovered")
+        placements = sched.submit_jobs(float(t), sc.sample_jobs(rng, 1),
+                                       pad_to=sc.max_layers)
+        if degraded and not recovered:
+            cloud_hits_during_outage += sum(
+                cloud in p.nodes_used for p in placements)
+
+    tr = sched.trace
+    print(f"\nday served: {len(tr.records)} arrivals, "
+          f"placements touching degraded cloud during outage: "
+          f"{cloud_hits_during_outage}")
+    quarters = np.array_split(np.arange(len(tr.records)), 4)
+    labels = ["night", "morning ramp", "midday peak*", "afternoon"]
+    print("quarter          arrivals   p50 lat    p99 lat   max backlog")
+    peak_backlog = 0.0
+    for idx, label in zip(quarters, labels):
+        lats = np.concatenate([np.asarray(tr.records[i].latencies)
+                               for i in idx]) if idx.size else np.array([0.0])
+        backs = [tr.records[i].backlog_after for i in idx] or [0.0]
+        peak_backlog = max(peak_backlog, max(backs))
+        print(f"{label:16s} {idx.size:8d}  {np.percentile(lats, 50):8.2f}s "
+              f"{np.percentile(lats, 99):9.2f}s  {max(backs):10.2f}s")
+    print("(* straggler event mid-quarter)")
+    final = tr.records[-1].backlog_after
+    print(f"peak backlog {peak_backlog:.2f}s -> end of day {final:.2f}s: the "
+          f"outage bubble drains once the cloud recovers\n"
+          f"(the legacy no-drain loop's backlog only ever climbs)")
+    assert final < peak_backlog
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

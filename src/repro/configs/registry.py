@@ -29,6 +29,20 @@ def get(arch: str):
     return importlib.import_module(f"repro.configs.{arch}")
 
 
+def cost_profile(arch: str, *, seq_len: int = 2048, batch: int = 1):
+    """Per-layer (c_jl FLOPs, d_jl bytes) for any registered arch.
+
+    Hides the signature split between the paper's conv nets (batch only)
+    and the LM families (seq_len + batch) — the single dispatch point for
+    the serving scheduler and the scenario traffic mixes.
+    """
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = get(arch)
+    if arch in PAPER_MODELS:
+        return mod.cost_profile(batch=batch)
+    return mod.cost_profile(seq_len=seq_len, batch=batch)
+
+
 def config(arch: str):
     return get(arch).config()
 

@@ -5,7 +5,10 @@
 # Pallas tropical-matmul kernel in repro.kernels).
 from .network import (ComputeNetwork, INF, make_network, small_topology,
                       us_backbone)
+from .state import (QueueState, Topology, advance, backlog_seconds,
+                    total_backlog)
 from .jobs import InferenceJob, JobBatch, batch_jobs, synthetic_job
+from . import arrivals
 from .routing import (Route, route_single, route_batch,
                       cost_given_assignment, commit_assignment)
 from .shortest_path import (Closures, build_closures, build_closures_batch,
@@ -20,6 +23,8 @@ from . import bounds, exact, layered_graph, shortest_path, solvers
 
 __all__ = [
     "ComputeNetwork", "INF", "make_network", "small_topology", "us_backbone",
+    "Topology", "QueueState", "advance", "backlog_seconds", "total_backlog",
+    "arrivals",
     "InferenceJob", "JobBatch", "batch_jobs", "synthetic_job",
     "Route", "route_single", "route_batch", "cost_given_assignment",
     "commit_assignment",

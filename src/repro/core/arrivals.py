@@ -1,0 +1,121 @@
+"""Arrival processes: request batches arriving on a clock.
+
+The online serving loop (``repro.serving.online``) drains the network's
+:class:`~repro.core.state.QueueState` to each arrival time before solving.
+This module generates the arrival clocks.  Every process is a host-side
+generator of sorted timestamps in ``[0, horizon)`` seconds:
+
+  * :func:`poisson_times` — homogeneous Poisson with rate ``rate`` (1/s):
+    the memoryless baseline every stability argument is phrased against.
+  * :func:`bursty_times` — compound/batch Poisson: burst *epochs* arrive
+    Poisson at ``rate / burst_size`` and each epoch carries ``burst_size``
+    arrivals jittered ``within`` seconds apart, so the long-run rate is
+    ``rate`` but the short-run load is spiky.
+  * :func:`diurnal_times` — nonhomogeneous Poisson via thinning with a
+    sinusoidal rate  lam(t) = base + (peak - base) * (1 - cos(2 pi t /
+    period)) / 2  — a traffic "day" ramping from ``base_rate`` at t=0 to
+    ``peak_rate`` at mid-period and back.
+
+``make_process(name, **params)`` returns a ``(rng, horizon) -> times``
+callable from a string name, so scenarios and benchmarks can pick a
+process the same way they pick a solver.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import numpy as np
+
+ArrivalFn = Callable[[np.random.Generator, float], np.ndarray]
+
+
+class ArrivalProcess(Protocol):
+    """(rng, horizon seconds) -> sorted float64 arrival times in [0, horizon)."""
+
+    def __call__(self, rng: np.random.Generator, horizon: float) -> np.ndarray:
+        ...
+
+
+def poisson_times(rng: np.random.Generator, rate: float,
+                  horizon: float) -> np.ndarray:
+    """Homogeneous Poisson arrivals: i.i.d. Exp(rate) gaps."""
+    if rate <= 0:
+        return np.zeros((0,), np.float64)
+    # Draw ~horizon*rate + slack gaps in one shot, keep the prefix in range.
+    n = max(8, int(horizon * rate * 1.5) + 8)
+    times = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    while times.size and times[-1] < horizon:  # rare under-draw
+        extra = np.cumsum(rng.exponential(1.0 / rate, size=n)) + times[-1]
+        times = np.concatenate([times, extra])
+    return times[times < horizon]
+
+
+def bursty_times(rng: np.random.Generator, rate: float, horizon: float,
+                 *, burst_size: int = 4, within: float = 1e-3) -> np.ndarray:
+    """Batch-Poisson bursts: epochs at rate/burst_size, ``burst_size`` each."""
+    if burst_size < 1:
+        raise ValueError(f"burst_size must be >= 1, got {burst_size}")
+    epochs = poisson_times(rng, rate / burst_size, horizon)
+    offsets = rng.uniform(0.0, within, size=(epochs.size, burst_size))
+    offsets[:, 0] = 0.0
+    times = (epochs[:, None] + offsets).reshape(-1)
+    return np.sort(times[times < horizon])
+
+
+def diurnal_times(rng: np.random.Generator, base_rate: float, peak_rate: float,
+                  horizon: float, *, period: float | None = None) -> np.ndarray:
+    """Nonhomogeneous Poisson (thinning) with a sinusoidal daily profile."""
+    if peak_rate < base_rate:
+        raise ValueError(
+            f"peak_rate {peak_rate} must be >= base_rate {base_rate}")
+    period = horizon if period is None else period
+    lam_max = max(peak_rate, 1e-12)
+    cand = poisson_times(rng, lam_max, horizon)
+    lam = base_rate + (peak_rate - base_rate) * 0.5 * (
+        1.0 - np.cos(2.0 * np.pi * cand / period))
+    keep = rng.uniform(0.0, 1.0, size=cand.size) < lam / lam_max
+    return cand[keep]
+
+
+_PROCESSES: dict[str, Callable[..., ArrivalFn]] = {}
+
+
+def _register(name: str):
+    def deco(factory):
+        _PROCESSES[name] = factory
+        return factory
+    return deco
+
+
+@_register("poisson")
+def _poisson(rate: float = 1.0) -> ArrivalFn:
+    return lambda rng, horizon: poisson_times(rng, rate, horizon)
+
+
+@_register("bursty")
+def _bursty(rate: float = 1.0, burst_size: int = 4,
+            within: float = 1e-3) -> ArrivalFn:
+    return lambda rng, horizon: bursty_times(
+        rng, rate, horizon, burst_size=burst_size, within=within)
+
+
+@_register("diurnal")
+def _diurnal(base_rate: float = 0.2, peak_rate: float = 1.0,
+             period: float | None = None) -> ArrivalFn:
+    return lambda rng, horizon: diurnal_times(
+        rng, base_rate, peak_rate, horizon, period=period)
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_PROCESSES))
+
+
+def make_process(name: str, **params) -> ArrivalFn:
+    """Build an arrival-time generator by name (poisson | bursty | diurnal)."""
+    try:
+        factory = _PROCESSES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arrival process {name!r}; available: "
+            f"{', '.join(available())}") from None
+    return factory(**params)

@@ -34,8 +34,23 @@ class InferenceJob:
         return int(self.comp.shape[0])
 
     def __post_init__(self):
-        if self.data.shape[0] != self.comp.shape[0] + 1:
-            raise ValueError("data must have L+1 entries (input + L layer outputs)")
+        # Normalize-then-validate: store the converted arrays so list inputs
+        # fail here with a named ValueError, not later with AttributeError.
+        comp = np.asarray(self.comp, np.float32)
+        data = np.asarray(self.data, np.float32)
+        object.__setattr__(self, "comp", comp)
+        object.__setattr__(self, "data", data)
+        if comp.ndim != 1 or comp.shape[0] < 1:
+            raise ValueError(f"comp must be a non-empty [L] vector, got shape {comp.shape}")
+        if data.shape != (comp.shape[0] + 1,):
+            raise ValueError(
+                f"data must have L+1={comp.shape[0] + 1} entries (input + L "
+                f"layer outputs), got shape {data.shape}")
+        from .validation import check_finite_nonneg
+        check_finite_nonneg("comp", comp)
+        check_finite_nonneg("data", data)
+        if self.src < 0 or self.dst < 0:
+            raise ValueError(f"src/dst must be >= 0, got ({self.src}, {self.dst})")
 
 
 @jax.tree_util.register_dataclass
@@ -58,10 +73,17 @@ class JobBatch:
         return self.comp.shape[1]
 
 
-def batch_jobs(jobs: Sequence[InferenceJob]) -> JobBatch:
+def batch_jobs(jobs: Sequence[InferenceJob], *, pad_to: int | None = None) -> JobBatch:
+    """Pad jobs to a common layer count (``pad_to`` pins the padded width so
+    batches of varying composition share one jit shape)."""
     if not jobs:
         raise ValueError("empty job list")
     lmax = max(j.num_layers for j in jobs)
+    if pad_to is not None:
+        if pad_to < lmax:
+            raise ValueError(
+                f"pad_to={pad_to} is smaller than the longest job (L={lmax})")
+        lmax = pad_to
     J = len(jobs)
     comp = np.zeros((J, lmax), np.float32)
     data = np.zeros((J, lmax + 1), np.float32)

@@ -1,10 +1,19 @@
 """Physical computing network model G_p = (V_p, E_p).
 
-Nodes carry compute capacity ``mu_node`` (FLOP/s) and a compute queue
-``q_node`` (FLOPs of unfinished higher-priority work).  Directed links carry
-transmission capacity ``mu_link`` (bytes/s) and a transmission queue
-``q_link`` (bytes).  Everything is stored densely as ``[V]`` / ``[V, V]``
-arrays so the whole structure is a JAX pytree and can flow through jit/vmap.
+Since the time-aware state split (see :mod:`repro.core.state`) the network
+is two pytrees composed:
+
+  * :class:`~repro.core.state.Topology` — immutable capacities ``mu_node``
+    [V] (FLOP/s) and ``mu_link`` [V, V] (bytes/s),
+  * :class:`~repro.core.state.QueueState` — backlogs ``q_node`` [V]
+    (FLOPs), ``q_link`` [V, V] (bytes) and a scalar ``clock``, with a fluid
+    ``advance(dt)`` that drains each resource at rate mu.
+
+:class:`ComputeNetwork` is the thin composed *view* the jitted paths take:
+``net.mu_node`` etc. delegate to the parts, so every consumer written
+against the fused seed layout keeps working, while schedulers hold one
+``Topology`` and thread ``QueueState`` explicitly (``topo.view(state)``
+composes them with zero array rebuilds).
 
 Absent links have ``mu_link == 0``; :func:`link_weight` maps them to ``INF``.
 ``INF`` is a large *finite* sentinel (not ``jnp.inf``) so that min-plus
@@ -19,28 +28,66 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .state import QueueState, Topology, advance as _advance
+from .validation import check_finite_nonneg as _check_finite_nonneg
+
 INF = jnp.float32(1e30)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ComputeNetwork:
-    """Dense representation of the physical computing network."""
+    """Zero-copy view composing a :class:`Topology` with a :class:`QueueState`."""
 
-    mu_node: jax.Array  # [V] FLOP/s  (0 = no compute resources at node)
-    mu_link: jax.Array  # [V, V] bytes/s (0 = no link)
-    q_node: jax.Array   # [V] FLOPs queued
-    q_link: jax.Array   # [V, V] bytes queued
+    topology: Topology
+    state: QueueState
+
+    # -- flat accessors (the seed's fused field layout) ---------------------
+    @property
+    def mu_node(self) -> jax.Array:
+        return self.topology.mu_node
+
+    @property
+    def mu_link(self) -> jax.Array:
+        return self.topology.mu_link
+
+    @property
+    def q_node(self) -> jax.Array:
+        return self.state.q_node
+
+    @property
+    def q_link(self) -> jax.Array:
+        return self.state.q_link
+
+    @property
+    def clock(self) -> jax.Array:
+        return self.state.clock
 
     @property
     def num_nodes(self) -> int:
-        return self.mu_node.shape[0]
+        return self.topology.num_nodes
+
+    @classmethod
+    def of(cls, mu_node, mu_link, q_node, q_link,
+           clock: float = 0.0) -> "ComputeNetwork":
+        """Build a view from flat arrays (the pre-split constructor shape)."""
+        return cls(topology=Topology(mu_node=mu_node, mu_link=mu_link),
+                   state=QueueState(q_node=q_node, q_link=q_link,
+                                    clock=jnp.float32(clock)))
 
     def with_queues(self, q_node: jax.Array, q_link: jax.Array) -> "ComputeNetwork":
-        return dataclasses.replace(self, q_node=q_node, q_link=q_link)
+        """New backlogs, same topology and clock."""
+        return dataclasses.replace(
+            self, state=self.state.with_queues(q_node, q_link))
 
     def reset_queues(self) -> "ComputeNetwork":
-        return self.with_queues(jnp.zeros_like(self.q_node), jnp.zeros_like(self.q_link))
+        return self.with_queues(jnp.zeros_like(self.q_node),
+                                jnp.zeros_like(self.q_link))
+
+    def advance(self, dt) -> "ComputeNetwork":
+        """Fluid drain: every resource works off backlog at rate mu for dt s."""
+        return dataclasses.replace(
+            self, state=_advance(self.topology, self.state, dt))
 
 
 def make_network(
@@ -57,16 +104,31 @@ def make_network(
       edges: (u, v, capacity bytes/s) triples.
       node_caps: [V] compute capacities in FLOP/s.
       bidirectional: mirror every edge (the paper assumes bidirectional links).
+
+    Raises ``ValueError`` naming the offending field for negative/NaN
+    capacities, out-of-range endpoints, or a mis-shaped ``node_caps``.
     """
+    if num_nodes <= 0:
+        raise ValueError(f"num_nodes must be positive, got {num_nodes}")
     mu_link = np.zeros((num_nodes, num_nodes), np.float32)
-    for u, v, cap in edges:
+    for i, (u, v, cap) in enumerate(edges):
+        if not (0 <= u < num_nodes and 0 <= v < num_nodes):
+            raise ValueError(
+                f"edges[{i}]=({u}, {v}): endpoint out of range [0, {num_nodes})")
+        if u == v:
+            raise ValueError(f"edges[{i}]: self-loop ({u}, {v}) not allowed")
+        if not np.isfinite(cap) or cap < 0:
+            raise ValueError(
+                f"edges[{i}]=({u}, {v}): capacity {cap!r} must be finite and >= 0")
         mu_link[u, v] = cap
         if bidirectional:
             mu_link[v, u] = cap
     mu_node = np.asarray(node_caps, np.float32)
     if mu_node.shape != (num_nodes,):
-        raise ValueError(f"node_caps must have shape ({num_nodes},)")
-    return ComputeNetwork(
+        raise ValueError(
+            f"node_caps must have shape ({num_nodes},), got {mu_node.shape}")
+    _check_finite_nonneg("node_caps", mu_node)
+    return ComputeNetwork.of(
         mu_node=jnp.asarray(mu_node),
         mu_link=jnp.asarray(mu_link),
         q_node=jnp.zeros((num_nodes,), jnp.float32),

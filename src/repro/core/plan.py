@@ -162,6 +162,7 @@ class Plan:
                 "mu_link": np.asarray(self.net.mu_link).tolist(),
                 "q_node": np.asarray(self.net.q_node).tolist(),
                 "q_link": np.asarray(self.net.q_link).tolist(),
+                "clock": float(np.asarray(self.net.clock)),
             }
         return d
 
@@ -177,11 +178,12 @@ class Plan:
         if "net" in d:
             import jax.numpy as jnp
             nd = d["net"]
-            net = ComputeNetwork(
+            net = ComputeNetwork.of(
                 mu_node=jnp.asarray(nd["mu_node"], jnp.float32),
                 mu_link=jnp.asarray(nd["mu_link"], jnp.float32),
                 q_node=jnp.asarray(nd["q_node"], jnp.float32),
                 q_link=jnp.asarray(nd["q_link"], jnp.float32),
+                clock=float(nd.get("clock", 0.0)),
             )
         return cls(
             assign=np.asarray(d["assign"], np.int32),

@@ -24,6 +24,7 @@ import time
 from typing import Callable, Protocol, runtime_checkable
 
 from .network import ComputeNetwork
+from .state import QueueState, Topology
 from .jobs import JobBatch
 from .plan import Plan
 from .shortest_path import closure_build_count
@@ -65,9 +66,15 @@ def get(name: str) -> Solver:
         ) from None
 
 
-def solve(net: ComputeNetwork, batch: JobBatch, method: str = "greedy",
+def solve(net: ComputeNetwork | Topology, batch: JobBatch,
+          method: str = "greedy", *, state: QueueState | None = None,
           **opts) -> Plan:
     """Route a job batch with the named algorithm; always returns a Plan.
+
+    ``net`` may be a fused :class:`ComputeNetwork` view or an immutable
+    :class:`Topology` with the queue ``state`` passed explicitly — the
+    online scheduler's calling convention (``solve(topo, batch,
+    state=qs)``); the two are composed zero-copy.
 
     The plan's ``meta`` records the method name, wall-clock solve time
     (``meta["solve_s"]``), and the number of host-level min-plus closure
@@ -75,6 +82,10 @@ def solve(net: ComputeNetwork, batch: JobBatch, method: str = "greedy",
     metric the closure-reuse pipeline minimizes) on top of whatever the
     solver itself reports.
     """
+    if isinstance(net, Topology):
+        net = net.view(state)
+    elif state is not None:
+        raise ValueError("state= is only meaningful with a Topology first arg")
     fn = get(method)
     n0 = closure_build_count()
     t0 = time.perf_counter()

@@ -1,0 +1,129 @@
+"""Time-aware network state: immutable :class:`Topology` + fluid :class:`QueueState`.
+
+The paper charges waiting time against queue backlogs Q but says nothing
+about *time passing*: a one-shot batch evaluation only ever adds to the
+queues.  For online serving the state must also **drain** — every resource
+works through its backlog at its service rate mu while the clock runs.
+This module is the split the rest of the stack builds on:
+
+  * :class:`Topology` — what the network *is*: compute capacities
+    ``mu_node`` [V] and link capacities ``mu_link`` [V, V].  Immutable for
+    the lifetime of a deployment (straggler events scale a *view* of it,
+    never mutate it).
+  * :class:`QueueState` — what the network is *doing*: backlogs ``q_node``
+    [V] / ``q_link`` [V, V] plus a scalar ``clock``.  :func:`advance`
+    implements the fluid drain  q <- max(q - mu * dt, 0),  clock <- clock
+    + dt: each resource serves its backlog at full rate (work-conserving,
+    the same service model the fictitious bound charges waiting against).
+
+Both are registered JAX pytrees, so jitted paths take them explicitly and a
+:class:`~repro.core.network.ComputeNetwork` is just the zero-copy composed
+view ``topology.view(state)`` — no arrays are rebuilt anywhere.
+
+The fluid drain is exact for the bound's purposes: the waiting term
+Q_u / mu_u of a backlog drained for dt seconds is exactly ``max(Q_u -
+mu_u * dt, 0) / mu_u`` — the residual wait a new arrival at ``clock + dt``
+would experience.  It also composes: ``advance(s, a).advance(b) ==
+advance(s, a + b)`` (clipping at zero commutes with further draining),
+which the property tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Immutable capacities of the physical network (a JAX pytree)."""
+
+    mu_node: jax.Array  # [V] FLOP/s (0 = no compute resources at node)
+    mu_link: jax.Array  # [V, V] bytes/s (0 = no link)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.mu_node.shape[0]
+
+    def empty_state(self, clock: float = 0.0) -> "QueueState":
+        """All-zero backlogs at the given clock."""
+        return QueueState(
+            q_node=jnp.zeros_like(self.mu_node),
+            q_link=jnp.zeros_like(self.mu_link),
+            clock=jnp.float32(clock),
+        )
+
+    def view(self, state: "QueueState | None" = None):
+        """Compose with a queue state into a :class:`ComputeNetwork` view."""
+        from .network import ComputeNetwork
+        return ComputeNetwork(topology=self,
+                              state=self.empty_state() if state is None
+                              else state)
+
+    def scale_nodes(self, factor) -> "Topology":
+        """Topology with ``mu_node * factor`` (elementwise; straggler views)."""
+        return Topology(mu_node=self.mu_node * jnp.asarray(factor),
+                        mu_link=self.mu_link)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QueueState:
+    """Backlogs + clock: the only mutable part of the network (a pytree)."""
+
+    q_node: jax.Array  # [V] FLOPs queued
+    q_link: jax.Array  # [V, V] bytes queued
+    clock: jax.Array   # scalar f32 seconds
+
+    def advance(self, topo: Topology, dt) -> "QueueState":
+        """Fluid drain for ``dt`` seconds (see :func:`advance`)."""
+        return advance(topo, self, dt)
+
+    def with_queues(self, q_node: jax.Array, q_link: jax.Array) -> "QueueState":
+        """Same clock, new backlogs."""
+        return dataclasses.replace(self, q_node=q_node, q_link=q_link)
+
+
+@jax.jit
+def advance(topo: Topology, state: QueueState, dt) -> QueueState:
+    """Drain every resource at its service rate for ``dt`` seconds.
+
+    q <- max(q - mu * dt, 0) on nodes and links; clock <- clock + dt.
+    Resources with mu == 0 hold no backlog by construction and stay at 0.
+
+    ``clock`` is float32 (a pytree leaf under 32-bit JAX), so *accumulating*
+    it here loses sub-second ticks once it exceeds ~2^24 s; long-lived
+    drivers (the serving schedulers) keep an authoritative float64 clock
+    host-side and stamp ``state.clock`` from it instead of summing.
+    """
+    dt = jnp.asarray(dt, jnp.float32)
+    return QueueState(
+        q_node=jnp.maximum(state.q_node - topo.mu_node * dt, 0.0),
+        q_link=jnp.maximum(state.q_link - topo.mu_link * dt, 0.0),
+        clock=state.clock + dt,
+    )
+
+
+def backlog_seconds(topo: Topology, state: QueueState) -> float:
+    """Worst-resource residual wait: max over nodes/links of Q / mu (host).
+
+    This is the quantity a new top-priority arrival would wait behind at the
+    most backed-up resource — the scalar the online benchmarks and the
+    stability tests track over time.
+    """
+    mu_n = np.asarray(topo.mu_node, np.float64)
+    mu_l = np.asarray(topo.mu_link, np.float64)
+    q_n = np.asarray(state.q_node, np.float64)
+    q_l = np.asarray(state.q_link, np.float64)
+    node_wait = np.where(mu_n > 0, q_n / np.maximum(mu_n, 1e-30), 0.0)
+    link_wait = np.where(mu_l > 0, q_l / np.maximum(mu_l, 1e-30), 0.0)
+    return float(max(node_wait.max(initial=0.0), link_wait.max(initial=0.0)))
+
+
+def total_backlog(state: QueueState) -> tuple[float, float]:
+    """(sum of node backlogs in FLOPs, sum of link backlogs in bytes)."""
+    return (float(np.asarray(state.q_node, np.float64).sum()),
+            float(np.asarray(state.q_link, np.float64).sum()))

@@ -1,0 +1,210 @@
+"""Online serving loop: streamed arrivals against time-aware network state.
+
+The static path solves one batch against a snapshot of the queues.  This
+loop is the deployment setting: request batches arrive on a clock (Poisson,
+bursty, diurnal — ``repro.core.arrivals``), and before each batch is solved
+the scheduler **drains** the :class:`~repro.core.state.QueueState` to the
+arrival time (fluid q <- max(q - mu dt, 0)) — the work committed by earlier
+batches has been getting served in the meantime.  Under sub-capacity load
+this keeps backlogs (and hence latency bounds) bounded; the legacy no-drain
+commit loop (``drain=False``, the seed behaviour) only ever adds to Q and
+diverges under any sustained traffic — ``benchmarks/online_bench.py``
+captures both trajectories and ``tests/test_online.py`` asserts the
+contrast.
+
+``report_slowdown`` / ``replan_last`` are events on the same clock: a
+straggler reported at time t degrades the *effective* topology from t on
+(slower service and slower draining), and re-planning the last batch scores
+it against the state at the current clock.
+
+Per-arrival latency here is the fictitious-system completion bound of each
+request measured from its arrival instant — the same quantity the solver
+optimizes, now evaluated against a drained (time-correct) queue state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import arrivals as A, jobs as J
+from repro.core.state import Topology, backlog_seconds
+from .scheduler import Placement, Request, RoutedScheduler, requests_to_jobs
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalRecord:
+    """What happened at one arrival epoch."""
+
+    time: float
+    names: tuple[str, ...]
+    latencies: tuple[float, ...]     # per-request completion bounds (s)
+    backlog_before: float            # worst-resource wait (s) after draining
+    backlog_after: float             # ... after committing this batch
+    solve_s: float
+
+
+@dataclasses.dataclass
+class OnlineTrace:
+    """Recorded trajectory of one online run."""
+
+    records: list[ArrivalRecord] = dataclasses.field(default_factory=list)
+    events: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def times(self) -> np.ndarray:
+        return np.array([r.time for r in self.records], np.float64)
+
+    @property
+    def backlogs(self) -> np.ndarray:
+        """Post-commit worst-resource backlog (s) at each arrival."""
+        return np.array([r.backlog_after for r in self.records], np.float64)
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.array([x for r in self.records for x in r.latencies],
+                        np.float64)
+
+    def percentile(self, q: float) -> float:
+        lat = self.latencies
+        return float(np.percentile(lat, q)) if lat.size else float("nan")
+
+    def backlog_growth(self) -> float:
+        """max backlog over the run's second half / first half.
+
+        ~1 for a stable (drained) system that has reached steady state;
+        grows without bound for the no-drain commit loop.
+        """
+        b = self.backlogs
+        if b.size < 4:
+            return float("nan")
+        half = b.size // 2
+        first = max(b[:half].max(), 1e-12)
+        return float(b[half:].max() / first)
+
+    def summary(self) -> dict:
+        return {
+            "arrivals": len(self.records),
+            "requests": int(self.latencies.size),
+            "p50_latency_s": self.percentile(50),
+            "p99_latency_s": self.percentile(99),
+            "max_backlog_s": float(self.backlogs.max()) if self.records else 0.0,
+            "final_backlog_s": self.records[-1].backlog_after if self.records else 0.0,
+            "backlog_growth": self.backlog_growth(),
+        }
+
+    def to_dict(self) -> dict:
+        return {
+            **self.summary(),
+            "times": self.times.tolist(),
+            "backlogs": self.backlogs.tolist(),
+            "latencies": self.latencies.tolist(),
+            "events": self.events,
+        }
+
+
+class OnlineScheduler(RoutedScheduler):
+    """RoutedScheduler + a clock: drains state to each event before acting.
+
+    ``drain=False`` reproduces the legacy behaviour (queues only grow) for
+    divergence comparisons; everything else is identical, so any gap between
+    the two runs is the drain semantics alone.
+    """
+
+    def __init__(self, net: Topology, *, method: str = "greedy",
+                 drain_queues: bool = True, **solver_opts):
+        super().__init__(net, method=method, **solver_opts)
+        self.drain_queues = drain_queues
+        self.trace = OnlineTrace()
+
+    # -- clock --------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """Event time == the scheduler's one authoritative clock."""
+        return self.clock
+
+    def advance_to(self, t: float) -> None:
+        """Move the clock to absolute time ``t``, draining if enabled.
+
+        The clock always advances — time passing and queue draining are
+        independent; ``drain_queues=False`` freezes only the backlogs.
+        """
+        if t < self.now - 1e-9:
+            raise ValueError(f"time went backwards: {t} < {self.now}")
+        dt = max(t - self.now, 0.0)
+        if dt > 0 and self.drain_queues:
+            # drains at effective (health-aware) rates
+            self.state = self.state.advance(self._effective_topology(), dt)
+        self._now = max(self._now, float(t))
+        self._stamp_clock()
+
+    # -- events -------------------------------------------------------------
+    def submit_jobs(self, t: float, infer_jobs: Sequence[J.InferenceJob],
+                    *, pad_to: int | None = None) -> list[Placement]:
+        """Arrival event: drain to ``t``, place the batch, record the epoch."""
+        self.advance_to(t)
+        eff = self._effective_topology()
+        before = backlog_seconds(eff, self.state)
+        placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to)
+        after = backlog_seconds(eff, self.state)
+        self.trace.records.append(ArrivalRecord(
+            time=t,
+            names=tuple(p.job_name for p in placements),
+            latencies=tuple(p.bound_s for p in placements),
+            backlog_before=before,
+            backlog_after=after,
+            solve_s=float(self.last_plan.meta.get("solve_s", 0.0)),
+        ))
+        return placements
+
+    def submit(self, t: float, requests: list[Request],
+               *, pad_to: int | None = None) -> list[Placement]:
+        return self.submit_jobs(t, requests_to_jobs(requests), pad_to=pad_to)
+
+    def report_slowdown(self, node: int, factor: float,
+                        *, at: float | None = None) -> None:
+        """Straggler event on the clock: drain to ``at`` (default: now),
+        then degrade the node's effective rate from that instant on."""
+        if at is not None:
+            self.advance_to(at)
+        super().report_slowdown(node, factor)
+        self.trace.events.append({"time": self.now, "event": "slowdown",
+                                  "node": int(node), "factor": float(factor)})
+
+    def replan_last(self) -> list[Placement] | None:
+        out = super().replan_last()
+        if out is not None:
+            self.trace.events.append({"time": self.now, "event": "replan",
+                                      "bound_s": self.last_plan.bound()})
+        return out
+
+
+def run_online(scenario, *, horizon: float, seed: int = 0,
+               process: str = "poisson", rate: float = 1.0,
+               batch_size: int = 1, method: str = "greedy",
+               drain_queues: bool = True, pad_to: int | None = None,
+               process_params: dict | None = None,
+               **solver_opts) -> OnlineTrace:
+    """Drive a scenario through an arrival stream; return the trace.
+
+    ``scenario`` is anything with ``.topology`` and
+    ``.sample_jobs(rng, n) -> list[InferenceJob]`` —
+    ``repro.scenarios.make_scenario(...)`` is the canonical source.
+    ``process``/``rate`` name an arrival process from
+    ``repro.core.arrivals`` (``rate`` is ignored by processes that take
+    their own rate parameters via ``process_params``).
+    """
+    rng = np.random.default_rng(seed)
+    params = dict(process_params or {})
+    if process in ("poisson", "bursty") and "rate" not in params:
+        params["rate"] = rate
+    times = A.make_process(process, **params)(rng, horizon)
+    sched = OnlineScheduler(scenario.topology, method=method,
+                            drain_queues=drain_queues, **solver_opts)
+    if pad_to is None:
+        pad_to = getattr(scenario, "max_layers", None)
+    for t in times:
+        jobs = scenario.sample_jobs(rng, batch_size)
+        sched.submit_jobs(float(t), jobs, pad_to=pad_to)
+    return sched.trace

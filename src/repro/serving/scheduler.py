@@ -6,6 +6,13 @@ modeled as the paper's computing network: slice i becomes node i with
 bytes/s, and the per-slice backlog of already-scheduled work is exactly the
 queue vector Q the formulation charges waiting time against.
 
+Since the time-aware state split the scheduler holds the two parts
+explicitly: one immutable :class:`~repro.core.state.Topology` for the life
+of the deployment and a :class:`~repro.core.state.QueueState` that evolves
+— ``commit`` grows it, :meth:`RoutedScheduler.advance` drains it (fluid
+q <- max(q - mu dt, 0) while the clock runs).  Solvers see the zero-copy
+composed view ``topo.view(state)``; nothing rebuilds arrays.
+
 Every batch of inference requests is turned into InferenceJobs via the
 architecture cost profiles (configs/<arch>.cost_profile) and placed through
 the unified solver entry point (``solvers.solve`` — greedy by default, any
@@ -32,6 +39,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import jobs as J, network as N, solvers
+from repro.core.state import QueueState, Topology
 from repro.core.plan import Plan
 from repro.configs import registry
 
@@ -78,26 +86,81 @@ class Request:
     name: str = ""
 
 
+def requests_to_jobs(requests: list[Request]) -> list[J.InferenceJob]:
+    """Cost-profile each request into an :class:`InferenceJob`."""
+    infer_jobs = []
+    for i, r in enumerate(requests):
+        comp, data = registry.cost_profile(r.arch, seq_len=r.seq_len,
+                                           batch=r.batch)
+        infer_jobs.append(J.InferenceJob(
+            r.name or f"req{i}", r.src, r.dst,
+            comp.astype(np.float32), data.astype(np.float32)))
+    return infer_jobs
+
+
 class RoutedScheduler:
-    def __init__(self, net: N.ComputeNetwork, *, method: str = "greedy",
-                 **solver_opts):
-        self.base_net = net
-        self.net = net
+    drain_queues: bool = True  # OnlineScheduler's no-drain baseline flips this
+
+    def __init__(self, net: N.ComputeNetwork | Topology, *,
+                 method: str = "greedy", **solver_opts):
+        if isinstance(net, Topology):
+            self.topology = net
+            self.state = net.empty_state()
+        else:
+            self.topology = net.topology
+            self.state = net.state
         self.method = method
         self.solver_opts = solver_opts
-        self._slowdown = np.ones((net.num_nodes,), np.float32)
-        self._last: tuple[J.JobBatch, list[J.InferenceJob],
-                          N.ComputeNetwork] | None = None
+        # Authoritative clock, host-side float64: ``state.clock`` (f32, so it
+        # loses sub-second ticks past ~2^24 s if accumulated) is only ever
+        # *stamped* from this, never summed.
+        self._now = float(np.asarray(self.state.clock))
+        self._slowdown = np.ones((self.topology.num_nodes,), np.float32)
+        # (batch, jobs, pre-batch state, health + clock at snapshot time)
+        self._last: tuple[J.JobBatch, list[J.InferenceJob], QueueState,
+                          Topology, float] | None = None
         self.last_plan: Plan | None = None
 
-    # -- cluster health -----------------------------------------------------
+    # -- compatibility views ------------------------------------------------
+    @property
+    def net(self) -> N.ComputeNetwork:
+        """Current composed view (base topology + live queue state)."""
+        return self.topology.view(self.state)
+
+    @property
+    def base_net(self) -> N.ComputeNetwork:
+        """Healthy-capacity view with empty queues."""
+        return self.topology.view()
+
+    # -- cluster health / time ---------------------------------------------
     def report_slowdown(self, node: int, factor: float) -> None:
         """Straggling slice: effective mu_u /= factor from now on."""
         self._slowdown[node] = factor
 
+    def advance(self, dt: float) -> None:
+        """Let ``dt`` seconds pass: every resource drains at its effective
+        rate (slowed nodes drain slower) and the clock moves forward."""
+        if dt < 0:
+            raise ValueError(f"dt must be >= 0, got {dt}")
+        self.state = self.state.advance(self._effective_topology(), dt)
+        self._now += float(dt)
+        self._stamp_clock()
+
+    def _stamp_clock(self) -> None:
+        import jax.numpy as jnp
+        self.state = dataclasses.replace(self.state,
+                                         clock=jnp.float32(self._now))
+
+    @property
+    def clock(self) -> float:
+        return self._now
+
     def drain(self) -> None:
-        """All scheduled work finished: reset queues."""
-        self.net = self.net.reset_queues()
+        """All scheduled work finished: reset queues (clock preserved)."""
+        import jax.numpy as jnp
+        self.state = self.state.with_queues(
+            jnp.zeros_like(self.state.q_node),
+            jnp.zeros_like(self.state.q_link))
         self._last = None
         self.last_plan = None
 
@@ -115,10 +178,9 @@ class RoutedScheduler:
         return {k: m[k] for k in ("method", "solve_s", "closure_builds",
                                   "n_routings") if k in m}
 
-    def _effective_net(self) -> N.ComputeNetwork:
+    def _effective_topology(self) -> Topology:
         import jax.numpy as jnp
-        mu = self.base_net.mu_node / jnp.asarray(self._slowdown)
-        return dataclasses.replace(self.net, mu_node=mu)
+        return self.topology.scale_nodes(1.0 / jnp.asarray(self._slowdown))
 
     # -- placement ----------------------------------------------------------
     def _placements(self, plan: Plan,
@@ -132,34 +194,31 @@ class RoutedScheduler:
         return out
 
     def _solve_and_commit(self, batch: J.JobBatch) -> Plan:
-        plan = solvers.solve(self._effective_net(), batch,
-                             method=self.method, **self.solver_opts)
+        topo = self._effective_topology()
+        plan = solvers.solve(topo, batch, method=self.method,
+                             state=self.state, **self.solver_opts)
         if plan.net is None:  # e.g. the exact solver reports no queue state
             plan = dataclasses.replace(
-                plan, net=plan.commit(self._effective_net(), batch))
-        self.net = dataclasses.replace(
-            self.net, q_node=plan.net.q_node, q_link=plan.net.q_link)
+                plan, net=plan.commit(topo.view(self.state), batch))
+        # Committed backlogs come from the plan; the clock is ours to keep.
+        self.state = self.state.with_queues(plan.net.q_node, plan.net.q_link)
         self.last_plan = plan
         return plan
 
-    def schedule(self, requests: list[Request]) -> list[Placement]:
-        infer_jobs = []
-        for i, r in enumerate(requests):
-            mod = registry.get(r.arch)
-            if r.arch in registry.PAPER_MODELS:
-                comp, data = mod.cost_profile(batch=r.batch)
-            else:
-                comp, data = mod.cost_profile(seq_len=r.seq_len, batch=r.batch)
-            infer_jobs.append(J.InferenceJob(
-                r.name or f"req{i}", r.src, r.dst,
-                comp.astype(np.float32), data.astype(np.float32)))
-        batch = J.batch_jobs(infer_jobs)
-        pre_net = self.net
+    def schedule_jobs(self, infer_jobs: list[J.InferenceJob],
+                      *, pad_to: int | None = None) -> list[Placement]:
+        """Place pre-built :class:`InferenceJob`s (the online loop's path)."""
+        batch = J.batch_jobs(infer_jobs, pad_to=pad_to)
+        pre_state = self.state
         plan = self._solve_and_commit(batch)
         # Record only after the solve succeeds, so a raising solver can't
         # poison replan_last() with a batch that was never scheduled.
-        self._last = (batch, infer_jobs, pre_net)
+        self._last = (batch, infer_jobs, pre_state,
+                      self._effective_topology(), self._now)
         return self._placements(plan, infer_jobs)
+
+    def schedule(self, requests: list[Request]) -> list[Placement]:
+        return self.schedule_jobs(requests_to_jobs(requests))
 
     def replan_last(self) -> list[Placement] | None:
         """Re-place the most recent batch against updated cluster health.
@@ -171,7 +230,17 @@ class RoutedScheduler:
         """
         if self._last is None:
             return None
-        batch, infer_jobs, pre_net = self._last
-        self.net = pre_net
+        batch, infer_jobs, pre_state, pre_topo, pre_now = self._last
+        # Pre-batch backlogs, drained over the time elapsed since they were
+        # captured (work that was genuinely served must not resurrect) at the
+        # *snapshot-time* health — the rates that actually applied until the
+        # event that triggered this replan (exact for the canonical
+        # report_slowdown-then-replan flow; piecewise health histories are
+        # approximated by their first segment).  The clock never rolls back.
+        elapsed = self._now - pre_now
+        if elapsed > 0 and self.drain_queues:
+            pre_state = pre_state.advance(pre_topo, elapsed)
+        self.state = pre_state
+        self._stamp_clock()
         plan = self._solve_and_commit(batch)
         return self._placements(plan, infer_jobs)

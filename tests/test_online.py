@@ -1,0 +1,188 @@
+"""Online serving loop: arrival processes, queue draining keeps backlog
+bounded under sub-capacity load (while the legacy no-drain loop diverges),
+and straggler/replan events on the clock."""
+import numpy as np
+import pytest
+
+from repro.core import arrivals as A
+from repro.scenarios import make_scenario
+from repro.serving.online import OnlineScheduler, run_online
+
+
+# -- arrival processes -------------------------------------------------------
+
+def test_poisson_times_rate_and_sorted():
+    rng = np.random.default_rng(0)
+    t = A.poisson_times(rng, rate=5.0, horizon=200.0)
+    assert (np.diff(t) >= 0).all() and (t >= 0).all() and (t < 200.0).all()
+    assert 700 <= t.size <= 1300  # ~1000 expected, generous tolerance
+
+
+def test_bursty_times_long_run_rate():
+    rng = np.random.default_rng(1)
+    t = A.bursty_times(rng, rate=8.0, horizon=100.0, burst_size=4)
+    assert (np.diff(t) >= 0).all()
+    assert 550 <= t.size <= 1050  # ~800 expected
+    # bursts: many tiny gaps
+    assert (np.diff(t) < 1e-3).sum() > t.size / 3
+
+
+def test_diurnal_times_peak_heavier_than_base():
+    rng = np.random.default_rng(2)
+    t = A.diurnal_times(rng, base_rate=0.5, peak_rate=8.0, horizon=100.0,
+                        period=100.0)
+    mid = ((t > 35) & (t < 65)).sum()     # around the peak
+    edges = ((t < 15) | (t > 85)).sum()   # around the base
+    assert mid > 2 * max(edges, 1)
+
+
+def test_make_process_registry():
+    assert set(A.available()) >= {"poisson", "bursty", "diurnal"}
+    fn = A.make_process("poisson", rate=2.0)
+    assert fn(np.random.default_rng(0), 10.0).size > 0
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        A.make_process("nope")
+
+
+# -- the headline regression: drain bounded, no-drain diverges ---------------
+
+def test_online_backlog_bounded_iff_draining():
+    """Sub-capacity Poisson load: the draining scheduler's backlog stays
+    bounded (flat second half) while the no-drain commit loop grows without
+    bound — the reason the time-aware state split exists."""
+    sc = make_scenario("star", seed=0)
+    rate = sc.nominal_rate(0.5)
+    horizon = 80 / rate
+    drain = run_online(sc, horizon=horizon, seed=1, rate=rate,
+                       drain_queues=True)
+    nodrain = run_online(sc, horizon=horizon, seed=1, rate=rate,
+                         drain_queues=False)
+    assert len(drain.records) == len(nodrain.records) >= 40
+    # bounded: the second half's peak backlog does not keep climbing
+    assert drain.backlog_growth() <= 1.3, drain.summary()
+    # divergent: backlog is (weakly) monotone and roughly doubles
+    nb = nodrain.backlogs
+    assert (np.diff(nb) >= -1e-6).all()
+    assert nodrain.backlog_growth() >= 1.7, nodrain.summary()
+    assert nodrain.percentile(99) > drain.percentile(99)
+
+
+def test_online_drained_latency_matches_fresh_solve_at_low_rate():
+    """Arrivals far apart: queues fully drain, so every request sees an
+    empty network — latency equals the scenario's empty-network service."""
+    sc = make_scenario("star", seed=0)
+    rate = sc.nominal_rate(0.01)  # gaps ~100x the service time
+    tr = run_online(sc, horizon=20 / rate, seed=3, rate=rate)
+    assert tr.records, "no arrivals sampled"
+    # an exponential gap is occasionally shorter than the service time, so
+    # ask for "almost always fully drained", not "always"
+    empty = [r.backlog_before == 0.0 for r in tr.records[1:]]
+    assert np.mean(empty) >= 0.7, tr.summary()
+
+
+# -- events on the clock -----------------------------------------------------
+
+def _edge_cloud_sched(**kw):
+    sc = make_scenario("edge-cloud", traffic="synthetic", seed=0)
+    return sc, OnlineScheduler(sc.topology, **kw)
+
+
+def test_slowdown_and_replan_are_clock_events():
+    sc, sched = _edge_cloud_sched()
+    rng = np.random.default_rng(0)
+    sched.submit_jobs(1.0, sc.sample_jobs(rng, 2), pad_to=sc.max_layers)
+    before = sched.last_plan
+    victim = int(before.assign[int(before.order[0]), 0])
+    sched.report_slowdown(victim, 100.0, at=2.5)
+    assert sched.now == 2.5 and sched.clock == pytest.approx(2.5)
+    replans = sched.replan_last()
+    assert replans is not None
+    for p in replans:
+        assert victim not in p.nodes_used
+    kinds = [e["event"] for e in sched.trace.events]
+    assert kinds == ["slowdown", "replan"]
+    assert sched.trace.events[0]["time"] == 2.5
+
+
+def test_nodrain_clock_still_advances():
+    """Time passing and queue draining are independent: the no-drain
+    baseline freezes backlogs but not the clock."""
+    sc, sched = _edge_cloud_sched(drain_queues=False)
+    rng = np.random.default_rng(2)
+    sched.submit_jobs(0.0, sc.sample_jobs(rng, 1), pad_to=sc.max_layers)
+    q0 = np.asarray(sched.state.q_node).copy()
+    sched.advance_to(5.0)
+    assert sched.clock == pytest.approx(5.0)
+    np.testing.assert_array_equal(np.asarray(sched.state.q_node), q0)
+
+
+def test_replan_drains_elapsed_time_from_rollback():
+    """replan_last after time has passed must not resurrect already-served
+    backlog: the pre-batch snapshot is drained over the elapsed window."""
+    sc, sched = _edge_cloud_sched()
+    rng = np.random.default_rng(3)
+    # batch 1 builds backlog; batch 2's pre-state snapshot carries it
+    sched.submit_jobs(0.0, sc.sample_jobs(rng, 2), pad_to=sc.max_layers)
+    sched.submit_jobs(0.0, sc.sample_jobs(rng, 2), pad_to=sc.max_layers)
+    assert float(np.asarray(sched._last[2].q_node).sum()) > 0
+    bound0 = sched.last_plan.bound()  # scored against batch-1 backlog
+    sched.advance_to(1e9)  # everything committed has long been served
+    sched.replan_last()
+    # the rollback snapshot was drained before re-solving, so batch 2 now
+    # sees an empty network and its bound strictly improves
+    assert sched.last_plan.bound() < bound0
+    assert sched.clock == pytest.approx(1e9)
+
+
+def test_inherited_advance_shares_the_one_clock():
+    """RoutedScheduler.advance and OnlineScheduler.advance_to move the same
+    clock: mixing them must not drain the same interval twice."""
+    sc, sched = _edge_cloud_sched()
+    rng = np.random.default_rng(5)
+    sched.submit_jobs(0.0, sc.sample_jobs(rng, 1), pad_to=sc.max_layers)
+    sched.advance(5.0)                 # inherited explicit-drain call
+    assert sched.now == pytest.approx(5.0)
+    q_after_advance = np.asarray(sched.state.q_node).copy()
+    sched.advance_to(5.0)              # same instant: dt == 0, no extra drain
+    np.testing.assert_array_equal(np.asarray(sched.state.q_node),
+                                  q_after_advance)
+    assert sched.clock == pytest.approx(5.0)
+
+
+def test_time_cannot_go_backwards():
+    _, sched = _edge_cloud_sched()
+    sched.advance_to(5.0)
+    with pytest.raises(ValueError, match="backwards"):
+        sched.advance_to(4.0)
+
+
+def test_slowdown_slows_draining():
+    """A degraded node drains its backlog at the degraded rate."""
+    sc, fast = _edge_cloud_sched()
+    _, slow = _edge_cloud_sched()
+    rng = np.random.default_rng(1)
+    jobs = sc.sample_jobs(rng, 2)
+    for s in (fast, slow):
+        s.submit_jobs(0.0, list(jobs), pad_to=sc.max_layers)
+    q = np.asarray(fast.state.q_node, np.float64)
+    mu = np.asarray(sc.topology.mu_node, np.float64)
+    waits = np.where(mu > 0, q / np.maximum(mu, 1e-30), 0.0)
+    hot = int(np.argmax(waits))
+    slow.report_slowdown(hot, 10.0)
+    dt = 0.25 * waits[hot]  # partial drain even at the healthy rate
+    assert dt > 0
+    fast.advance_to(dt)
+    slow.advance_to(dt)
+    q_fast = float(np.asarray(fast.state.q_node)[hot])
+    q_slow = float(np.asarray(slow.state.q_node)[hot])
+    assert q_slow > q_fast  # drained at mu/10 instead of mu
+
+
+def test_trace_to_dict_roundtrips_json():
+    import json
+    sc = make_scenario("random-geometric", seed=2)
+    rate = sc.nominal_rate(0.3)
+    tr = run_online(sc, horizon=10 / rate, seed=4, rate=rate)
+    blob = json.loads(json.dumps(tr.to_dict()))
+    assert blob["arrivals"] == len(tr.records)
+    assert len(blob["backlogs"]) == len(tr.records)

@@ -1,0 +1,81 @@
+"""Scenario catalog: make_scenario(name, seed) is the single entry point —
+coverage of all topology families, seed determinism, traffic mixes."""
+import numpy as np
+import pytest
+
+from repro.core import jobs as J, solve
+from repro.scenarios import (FAMILIES, MIXES, available_scenarios,
+                             make_scenario, make_traffic)
+
+
+def test_catalog_covers_required_families():
+    names = available_scenarios()
+    assert {"paper-small", "us-backbone", "edge-cloud", "random-geometric",
+            "star"} <= set(names)
+    assert len(names) >= 4
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_every_family_builds_and_routes(name):
+    sc = make_scenario(name, seed=0)
+    assert sc.num_nodes >= 2
+    assert sc.ingress and sc.egress
+    assert all(0 <= i < sc.num_nodes for i in sc.ingress + sc.egress)
+    # compute reachable: at least one node has capacity
+    assert float(np.asarray(sc.topology.mu_node).max()) > 0
+    rng = np.random.default_rng(0)
+    jobs = sc.sample_jobs(rng, 2)
+    assert all(j.num_layers <= sc.max_layers for j in jobs)
+    plan = solve(sc.topology, J.batch_jobs(jobs, pad_to=sc.max_layers),
+                 method="greedy", state=sc.topology.empty_state())
+    assert plan.makespan_bound < 1e29  # routable: src reaches dst
+    assert sc.mean_service_s > 0 and np.isfinite(sc.mean_service_s)
+    assert sc.nominal_rate(0.5) > 0
+
+
+def test_scenarios_deterministic_in_seed():
+    for name in ("random-geometric", "edge-cloud", "star"):
+        a = make_scenario(name, seed=7)
+        b = make_scenario(name, seed=7)
+        np.testing.assert_array_equal(np.asarray(a.topology.mu_link),
+                                      np.asarray(b.topology.mu_link))
+        ja = a.sample_jobs(np.random.default_rng(1), 3)
+        jb = b.sample_jobs(np.random.default_rng(1), 3)
+        for x, y in zip(ja, jb):
+            assert (x.src, x.dst) == (y.src, y.dst)
+            np.testing.assert_array_equal(x.comp, y.comp)
+    # seeded generators actually vary with the seed
+    g7 = make_scenario("random-geometric", seed=7)
+    g8 = make_scenario("random-geometric", seed=8)
+    assert not np.array_equal(np.asarray(g7.topology.mu_link),
+                              np.asarray(g8.topology.mu_link))
+
+
+def test_traffic_selection_by_name_and_kwarg():
+    assert make_scenario("us-backbone:lm").traffic.name == "lm"
+    assert make_scenario("us-backbone", traffic="lm").traffic.name == "lm"
+    assert make_scenario("us-backbone").traffic.name == "paper"
+    with pytest.raises(ValueError, match="either in the name"):
+        make_scenario("us-backbone:lm", traffic="paper")
+    with pytest.raises(ValueError, match="unknown scenario family"):
+        make_scenario("not-a-family")
+    with pytest.raises(ValueError, match="unknown traffic mix"):
+        make_traffic("not-a-mix")
+
+
+def test_traffic_mixes_cost_profiles():
+    assert set(MIXES) >= {"paper", "lm", "synthetic", "conv"}
+    rng = np.random.default_rng(0)
+    for mix_name in MIXES:
+        mix = make_traffic(mix_name)
+        job = mix.sample(rng, "j", 0, 1)
+        assert job.num_layers <= mix.max_layers
+        assert mix.mean_flops() > 0
+
+
+def test_src_dst_distinct_when_possible():
+    sc = make_scenario("star", seed=0)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        s, d = sc.sample_src_dst(rng)
+        assert s != d

@@ -114,3 +114,24 @@ def test_engine_generates():
     # determinism
     res2 = eng.generate(prompts, gen_len=8)
     np.testing.assert_array_equal(res.tokens, res2.tokens)
+    # fused single-call prefill == per-token reference loop
+    ref = eng.generate(prompts, gen_len=8, prefill_mode="per_token")
+    np.testing.assert_array_equal(res.tokens, ref.tokens)
+    import pytest
+    with pytest.raises(ValueError, match="prefill_mode"):
+        eng.generate(prompts, gen_len=8, prefill_mode="bogus")
+
+
+def test_scheduler_advance_drains_queues():
+    """Time passing drains the committed backlog at effective rates."""
+    sched = RoutedScheduler(_cluster())
+    sched.schedule([Request("olmo_1b", 0, 5, name="r0")])
+    q0 = float(np.asarray(sched.state.q_node).sum())
+    assert q0 > 0
+    sched.advance(1e-3)
+    q1 = float(np.asarray(sched.state.q_node).sum())
+    assert q1 < q0
+    sched.advance(1e9)  # plenty of time: everything drains
+    assert float(np.asarray(sched.state.q_node).max()) == 0.0
+    assert float(np.asarray(sched.state.q_link).max()) == 0.0
+    assert sched.clock > 0
