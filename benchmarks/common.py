@@ -29,6 +29,38 @@ QUICKSTART_BOUNDS = [
 QUICKSTART_ORDER = [3, 4, 6, 5, 7, 2, 0, 1]
 
 
+# Pre-ledger reference: the default (fluid-drain) online trajectory on
+# paper-small — run_online(make_scenario("paper-small", seed=0),
+# horizon=24/rate, seed=7, rate=nominal_rate(0.6)) — captured before the
+# committed-work ledger landed.  The fluid path must stay bit-identical
+# (the exact drain is opt-in); online_bench's fidelity section gates on it
+# as ``fluid_matches_seed``.
+FLUID_GOLD_SCENARIO = "paper-small"
+FLUID_GOLD_LOAD = 0.6
+FLUID_GOLD_ARRIVALS = 24
+FLUID_GOLD_SEED = 7
+FLUID_GOLD_BACKLOGS = [
+    0.03644493898639235, 0.03644493898639235, 0.03644493898639235,
+    0.19632062866064648, 0.19005575557234186, 0.19632062866064648,
+    0.23074857432573082, 0.03644493898639235, 0.03644493898639235,
+    0.03644493898639235, 0.19632062866064648, 0.16821560664505564,
+    0.03644493898639235, 0.19632062866064648, 0.19632062866064648,
+    0.1868424844665341, 0.03644493898639235, 0.03644493898639235,
+    0.03644493898639235, 0.03644493898639235, 0.05736757877488801,
+    0.24127095278122912, 0.03644493898639235, 0.03644493898639235,
+]
+FLUID_GOLD_LATENCIES = [
+    0.07911159098148346, 0.07911159098148346, 0.07911159098148346,
+    0.2389872968196869, 0.23272264003753662, 0.2389872968196869,
+    0.2840821146965027, 0.07911159098148346, 0.07911159098148346,
+    0.07911159098148346, 0.2389872968196869, 0.21088248491287231,
+    0.07911159098148346, 0.2389872968196869, 0.2389872968196869,
+    0.2295093536376953, 0.07911159098148346, 0.07911159098148346,
+    0.07911159098148346, 0.07911159098148346, 0.11070089042186737,
+    0.2879980802536011, 0.07911159098148346, 0.07911159098148346,
+]
+
+
 def quickstart_instance():
     """(net, batch) of the quickstart reference instance."""
     from repro.core import network as N

@@ -48,6 +48,11 @@ def main() -> None:
           lambda r: (f"bounded={all(x['drain_bounded'] for x in r)},"
                      f"diverges={all(x['nodrain_diverges'] for x in r)}")
           if r else "n/a")
+    bench("online_fidelity", lambda: online_bench.run_fidelity(smoke=True),
+          lambda r: (f"fluid_seed={r['fluid_matches_seed']},"
+                     f"exact_holds={r['all_exact_bounds_hold']},"
+                     f"gap={r['rows'][0]['backlog_gap_mean_s']:.4f}s")
+          if r and r.get("rows") else "n/a")
     bench("fig5_small", fig5_small.run,
           lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
     bench("fig_large", fig_large.run,

@@ -19,7 +19,9 @@ from .solvers import Solver, solve, register as register_solver, \
 from .greedy import GreedySolution, greedy_route
 from .annealing import SAResult, anneal, evaluate_solution
 from .schedule import SimResult, replay_solution, simulate
-from . import bounds, exact, layered_graph, shortest_path, solvers
+from .completions import (CommittedWork, LedgerJob, drain_exact,
+                          run_to_completion)
+from . import bounds, completions, exact, layered_graph, shortest_path, solvers
 
 __all__ = [
     "ComputeNetwork", "INF", "make_network", "small_topology", "us_backbone",
@@ -34,5 +36,7 @@ __all__ = [
     "GreedySolution", "greedy_route",  # deprecated alias + legacy name
     "SAResult", "anneal", "evaluate_solution",
     "SimResult", "replay_solution", "simulate",
-    "bounds", "exact", "layered_graph", "shortest_path", "solvers",
+    "CommittedWork", "LedgerJob", "drain_exact", "run_to_completion",
+    "bounds", "completions", "exact", "layered_graph", "shortest_path",
+    "solvers",
 ]

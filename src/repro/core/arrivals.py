@@ -80,11 +80,21 @@ def diurnal_times(rng: np.random.Generator, base_rate: float, peak_rate: float,
 _PROCESSES: dict[str, Callable[..., ArrivalFn]] = {}
 
 
-def _register(name: str):
+def register_process(name: str):
+    """Decorator: register an arrival-process factory under ``name``.
+
+    The factory's keyword arguments are its process params — callers pass
+    them via ``make_process(name, **params)`` (and, in the online loop,
+    ``run_online(process=name, process_params={...})``; the ``rate``
+    shorthand there only maps onto the built-ins).
+    """
     def deco(factory):
         _PROCESSES[name] = factory
         return factory
     return deco
+
+
+_register = register_process  # backwards-compatible internal alias
 
 
 @_register("poisson")
@@ -107,6 +117,7 @@ def _diurnal(base_rate: float = 0.2, peak_rate: float = 1.0,
 
 
 def available() -> tuple[str, ...]:
+    """Registered process names (built-ins + ``register_process`` extras)."""
     return tuple(sorted(_PROCESSES))
 
 

@@ -1,0 +1,279 @@
+"""Per-plan committed-work ledger + exact (event-accurate) queue drain.
+
+The fluid drain (:meth:`repro.core.state.QueueState.advance`) serves every
+resource independently at full rate: ``q <- max(q - mu * dt, 0)``.  That is
+the *most optimistic* work-conserving service model — it drains link bytes
+for layers whose producing compute hasn't finished, and node FLOPs out of
+priority order.  The paper's queues Q charge waiting time against
+*committed work* served by a preempt-resume priority system (the model
+``core.schedule.simulate`` implements exactly), so fluid-drained backlogs —
+and every latency bound evaluated against them — are systematically
+optimistic.
+
+:class:`CommittedWork` closes that gap.  It is the host-side companion to
+the :class:`~repro.core.state.QueueState` pytree: a ledger recording, per
+committed plan, each job's per-resource work items with its global priority
+and precedence (layer k's transfer cannot drain before layer k's compute
+completes — the stage order of :func:`repro.core.schedule.job_stages`).
+:func:`drain_exact` advances the ledger through the shared event loop
+(:func:`repro.core.schedule.run_event_loop`) a ``dt`` window at a time —
+the same preempt-resume semantics as the one-shot simulator, run
+incrementally between online arrivals.  The ledger is deliberately *not* a
+JAX pytree leaf container: the event loop is data-dependent control flow
+that belongs on the host; only the residual per-resource work it implies
+(:meth:`CommittedWork.queue_arrays`) is materialized back into the jitted
+``QueueState`` the solvers consume.
+
+All ledger operations are functional (they return new ledgers and never
+mutate tasks in place), so a scheduler can snapshot a ledger by reference —
+``replan_last``'s rollback does exactly that.
+
+Priorities are ledger-global: plans committed earlier hold strictly higher
+priority than later ones (each batch was solved against the queue state its
+predecessors built), and within a plan jobs keep their solver-assigned
+order.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import schedule
+from .state import QueueState, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerJob:
+    """One committed job's work items and drain progress."""
+
+    name: str
+    prio: int                  # ledger-global priority (0 = served first)
+    release: float             # absolute commit/arrival time (s)
+    stages: tuple[schedule.Stage, ...]  # (resource, work) in precedence order
+    ptr: int = 0               # completed-stage count
+    remaining: float | None = None      # residual work of the current stage
+    arrived: float = 0.0       # instant the job became ready at this stage
+
+    @property
+    def finished(self) -> bool:
+        return self.ptr >= len(self.stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommittedWork:
+    """Ledger of committed-but-unfinished work across all committed plans.
+
+    ``jobs`` holds live (unfinished) jobs; ``completed`` accumulates
+    ``(name, absolute completion time)`` pairs as drains finish jobs.
+    ``clock`` is the absolute time the ledger has been drained to — a
+    never-drained ledger (a pure commit *log*) keeps its initial clock, and
+    its jobs' ``release`` times drive the full-horizon replay instead.
+    """
+
+    num_nodes: int
+    clock: float = 0.0
+    jobs: tuple[LedgerJob, ...] = ()
+    completed: tuple[tuple[str, float], ...] = ()
+    next_prio: int = 0
+    # Completion records are keyed by job name, so names must be unique for
+    # the lifetime of the ledger; commit() enforces it against this set.
+    names_seen: frozenset[str] = frozenset()
+
+    @classmethod
+    def empty(cls, num_nodes: int, clock: float = 0.0) -> "CommittedWork":
+        return cls(num_nodes=int(num_nodes), clock=float(clock))
+
+    # -- committing plans -----------------------------------------------------
+    def commit(self, batch, plan, *, names=None,
+               at: float | None = None) -> "CommittedWork":
+        """Append one work item per job of a solved plan, released at ``at``.
+
+        The plan must carry explicit transfer paths (``plan.paths``, filled
+        by ``Plan.replay`` or ``schedule.replay_solution`` against the queue
+        state the plan was solved for); the ledger charges each layer's
+        bytes to exactly the hops the plan routed them over.  ``names`` (one
+        per job, batch order) key the completion records, so they must be
+        unique over the ledger's lifetime (a duplicate would silently
+        overwrite an earlier job's completion time) — a repeat raises
+        ``ValueError``; defaults to ``p<prio>``, unique by construction.
+        The ledger clock is *not* moved — commits are events, drains move
+        time.
+        """
+        at = self.clock if at is None else float(at)
+        if at < self.clock - 1e-9:
+            raise ValueError(
+                f"cannot commit at t={at} behind the ledger clock {self.clock}")
+        if plan.paths is None:
+            raise ValueError(
+                "plan must carry explicit paths to be committed to the "
+                "ledger; derive them with plan.replay(net, batch) or "
+                "schedule.replay_solution against the solve-time queue state")
+        stages = schedule.job_stages(batch, plan.assign, plan.paths)
+        order = plan.order
+        jobs = list(self.jobs)
+        seen = set(self.names_seen)
+        for slot in range(plan.num_jobs):
+            j = int(order[slot])
+            prio = self.next_prio + slot
+            name = names[j] if names is not None else f"p{prio}"
+            if name in seen:
+                raise ValueError(
+                    f"duplicate job name {name!r}: completion tracking keys "
+                    f"on job names, which must be unique per ledger — give "
+                    f"requests/jobs distinct names")
+            seen.add(name)
+            jobs.append(LedgerJob(name=name, prio=prio, release=at,
+                                  stages=tuple(stages[j]), arrived=at))
+        return dataclasses.replace(
+            self, jobs=tuple(jobs), next_prio=self.next_prio + plan.num_jobs,
+            names_seen=frozenset(seen))
+
+    def cleared(self) -> "CommittedWork":
+        """Drop all live jobs without recording completions (a scheduler's
+        hard reset — see ``RoutedScheduler.drain``)."""
+        return dataclasses.replace(self, jobs=())
+
+    # -- materializing state --------------------------------------------------
+    def queue_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Residual committed work per resource: (q_node [V], q_link [V, V]).
+
+        The exact-model counterpart of the fluid backlogs: the current
+        stage's residual plus every not-yet-started stage of every live
+        job, charged to its resource.  float32, ready for
+        ``QueueState.with_queues``.
+        """
+        qn = np.zeros((self.num_nodes,), np.float64)
+        ql = np.zeros((self.num_nodes, self.num_nodes), np.float64)
+        for job in self.jobs:
+            for k in range(job.ptr, len(job.stages)):
+                res, work = job.stages[k]
+                w = (job.remaining
+                     if k == job.ptr and job.remaining is not None else work)
+                if res[0] == "node":
+                    qn[res[1]] += w
+                else:
+                    ql[res[1], res[2]] += w
+        return qn.astype(np.float32), ql.astype(np.float32)
+
+    def queue_state(self, clock: float | None = None) -> QueueState:
+        """Residual work as a :class:`QueueState` (clock defaults to the
+        ledger clock)."""
+        import jax.numpy as jnp
+        qn, ql = self.queue_arrays()
+        return QueueState(q_node=jnp.asarray(qn), q_link=jnp.asarray(ql),
+                          clock=jnp.float32(self.clock if clock is None
+                                            else clock))
+
+    def backlog_seconds(self, topo: Topology) -> float:
+        """Worst-resource residual wait under the exact model (see
+        :func:`repro.core.state.backlog_seconds`)."""
+        from .state import backlog_seconds as _bs
+        return _bs(topo, self.queue_state())
+
+
+def _tasks_of(ledger: CommittedWork) -> list[schedule.TaskRun]:
+    return [schedule.TaskRun(stages=list(job.stages), prio=job.prio,
+                             ptr=job.ptr, remaining=job.remaining,
+                             arrived=job.arrived)
+            for job in ledger.jobs]
+
+
+def _fold(ledger: CommittedWork, tasks: list[schedule.TaskRun],
+          clock: float) -> CommittedWork:
+    """New ledger from post-loop task states (completions recorded)."""
+    live: list[LedgerJob] = []
+    done = list(ledger.completed)
+    for job, task in zip(ledger.jobs, tasks):
+        if task.done:
+            done.append((job.name, float(task.completion)))
+        else:
+            live.append(dataclasses.replace(job, ptr=task.ptr,
+                                            remaining=task.remaining,
+                                            arrived=task.arrived))
+    return dataclasses.replace(ledger, clock=float(clock), jobs=tuple(live),
+                               completed=tuple(done))
+
+
+def drain_exact(topo: Topology, ledger: CommittedWork, dt) -> CommittedWork:
+    """Advance the ledger ``dt`` seconds with preempt-resume priority service.
+
+    The exact counterpart of the fluid ``QueueState.advance``: every
+    resource serves the highest-priority *ready* work item (precedence
+    respected, preempting on arrival, work-conserving), via the same event
+    loop as :func:`repro.core.schedule.simulate`.  Draining in chunks
+    composes exactly: ``drain_exact(ledger, a)`` then ``b`` equals
+    ``drain_exact(ledger, a + b)`` — the property tests assert it.
+
+    ``topo`` is the *effective* topology (straggler-scaled rates apply for
+    the whole window, the same piecewise-constant-health approximation the
+    fluid drain makes).  Jobs finishing inside the window move to
+    ``ledger.completed`` with their completion instants.
+    """
+    dt = float(dt)
+    if dt < 0:
+        raise ValueError(f"dt must be >= 0, got {dt}")
+    t_end = ledger.clock + dt
+    if dt == 0.0 or not ledger.jobs:
+        return dataclasses.replace(ledger, clock=t_end)
+    mu_node = np.asarray(topo.mu_node, np.float64)
+    mu_link = np.asarray(topo.mu_link, np.float64)
+    tasks = _tasks_of(ledger)
+    schedule.run_event_loop(tasks, mu_node, mu_link, t=ledger.clock,
+                            t_end=t_end)
+    return _fold(ledger, tasks, t_end)
+
+
+def run_to_completion(topo: Topology,
+                      ledger: CommittedWork) -> tuple[dict[str, float],
+                                                      "CommittedWork"]:
+    """Serve every committed job to completion; the ground-truth replay.
+
+    Returns ``({name: absolute completion time} — including jobs already
+    completed by earlier drains — , the fully drained ledger)``.  On a
+    never-drained commit log this is the full-horizon event simulation of
+    the whole arrival history (jobs start at their ``release`` times); on a
+    live exact ledger it finishes the residual work — the two must agree,
+    which the fidelity benchmark checks.
+    """
+    completions = dict(ledger.completed)
+    if not ledger.jobs:
+        return completions, ledger
+    mu_node = np.asarray(topo.mu_node, np.float64)
+    mu_link = np.asarray(topo.mu_link, np.float64)
+    tasks = _tasks_of(ledger)
+    t = schedule.run_event_loop(tasks, mu_node, mu_link, t=ledger.clock)
+    out = _fold(ledger, tasks, max(ledger.clock, t))
+    completions.update({name: when for name, when in out.completed})
+    return completions, out
+
+
+def exact_backlog_trace(topo: Topology, log: CommittedWork,
+                        times) -> np.ndarray:
+    """Exact-model backlog (s) just before each epoch of a commit log.
+
+    Replays the *same plans* the log records — released at their commit
+    times — under :func:`drain_exact`, measuring the worst-resource
+    residual wait immediately before each ``times[i]`` (jobs committed at
+    exactly ``times[i]`` are excluded, matching the online trace's
+    ``backlog_before``).  Comparing against the fluid run's backlogs
+    isolates the drain semantics: policy decisions are held fixed.
+
+    ``log`` must be an undrained ledger (``track_commits=True`` keeps one).
+    """
+    jobs = sorted(log.jobs, key=lambda j: j.prio)
+    if any(j.ptr or j.remaining is not None for j in jobs):
+        raise ValueError("exact_backlog_trace needs an undrained commit log")
+    cur = dataclasses.replace(log, jobs=(), completed=())
+    out = []
+    k = 0
+    for t in np.asarray(times, np.float64):
+        add = []
+        while k < len(jobs) and jobs[k].release < t - 1e-12:
+            add.append(jobs[k])
+            k += 1
+        if add:
+            cur = dataclasses.replace(cur, jobs=cur.jobs + tuple(add))
+        cur = drain_exact(topo, cur, max(float(t) - cur.clock, 0.0))
+        out.append(cur.backlog_seconds(topo))
+    return np.asarray(out, np.float64)

@@ -13,6 +13,14 @@ bounds, the explicit per-layer transfer paths (chosen against the queue
 state seen at that job's priority level, as both Alg. 1 and Alg. 2 do), and
 the final queue state.  ``Plan.replay``/``Plan.simulate`` are the
 plan-first entry points.
+
+The inner event loop is shared machinery: :func:`run_event_loop` advances a
+set of :class:`TaskRun` records (per-job stage pointers + residual work)
+from ``t`` to ``t_end`` under preempt-resume priority service.  One-shot
+:func:`simulate` runs it to completion from time 0; the committed-work
+ledger (:mod:`repro.core.completions`) runs it *incrementally* — a ``dt``
+window at a time between online arrivals — which is what makes the exact
+queue drain a first-class alternative to the fluid model.
 """
 from __future__ import annotations
 
@@ -73,6 +81,131 @@ def replay_solution(net: ComputeNetwork, batch: JobBatch, assign, order=None):
     return bounds, paths, cur
 
 
+# A work stage: (resource key, amount of work).  Resource keys are
+# ("node", u) for compute (work in FLOPs) and ("link", u, v) for a directed
+# transfer hop (work in bytes).
+Stage = tuple[tuple, float]
+
+
+def job_stages(batch: JobBatch, assign,
+               paths: dict[int, list[list[tuple[int, int]]]]
+               ) -> dict[int, list[Stage]]:
+    """Per-job (resource, work) stage lists, in precedence order.
+
+    Layer l's output transfer hops come before layer l+1's compute, which
+    comes before layer l+1's output hops — so layer k's transfer cannot
+    start (and its bytes cannot occupy a link) before layer k's compute
+    completes.  This is the precedence structure both the one-shot
+    simulator and the incremental committed-work drain honour.
+    """
+    comp = np.asarray(batch.comp, np.float64)
+    data = np.asarray(batch.data, np.float64)
+    nl = np.asarray(batch.num_layers)
+    a = np.asarray(assign)
+    stages: dict[int, list[Stage]] = {}
+    for j in range(batch.num_jobs):
+        L = int(nl[j])
+        st: list[Stage] = []
+        for l in range(L + 1):
+            for (u, v) in paths[j][l]:
+                st.append((("link", u, v), float(data[j, l])))
+            if l < L:
+                st.append((("node", int(a[j, l])), float(comp[j, l])))
+        stages[j] = st
+    return stages
+
+
+@dataclasses.dataclass
+class TaskRun:
+    """Mutable run-state of one job inside the shared event loop."""
+
+    stages: list[Stage]        # (resource, work) in precedence order
+    prio: int                  # global priority (0 = served first)
+    ptr: int = 0               # completed-stage count
+    remaining: float | None = None  # residual work of the current stage
+    arrived: float = 0.0       # instant the job became ready at this stage
+    done: bool = False
+    completion: float = 0.0    # valid once done
+
+
+def _resource_rate(res: tuple, mu_node: np.ndarray,
+                   mu_link: np.ndarray) -> float:
+    return float(mu_node[res[1]] if res[0] == "node"
+                 else mu_link[res[1], res[2]])
+
+
+def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
+                   mu_link: np.ndarray, *, t: float = 0.0,
+                   t_end: float = np.inf, guard: int = 1_000_000) -> float:
+    """Preempt-resume priority service of ``tasks`` over ``[t, t_end]``.
+
+    Every resource serves the highest-priority arrived task (strict
+    priority, preempting on arrival, work-conserving).  Mutates the tasks
+    in place and returns the stop time: ``t_end`` if work remains beyond
+    it, else the instant the last event fired.  With the default
+    ``t_end=inf`` this is exactly the one-shot simulator's loop; a finite
+    ``t_end`` is the incremental drain window used by the committed-work
+    ledger.
+    """
+    for task in tasks:
+        if not task.done and task.ptr >= len(task.stages):
+            task.done = True
+            task.completion = task.arrived
+    steps = 0
+    while not all(task.done for task in tasks):
+        steps += 1
+        if steps > guard:
+            raise RuntimeError("simulator did not converge")
+        # Highest-priority arrived task per resource.
+        serving: dict[tuple, TaskRun] = {}
+        for task in tasks:
+            if task.done or task.arrived > t + 1e-18:
+                continue
+            res, work = task.stages[task.ptr]
+            if task.remaining is None:
+                task.remaining = work
+            cur = serving.get(res)
+            if cur is None or task.prio < cur.prio:
+                serving[res] = task
+        if not serving:
+            # advance to the next stage-arrival (nothing serveable now)
+            nxt = min(task.arrived for task in tasks if not task.done)
+            if nxt >= t_end:
+                return t_end if np.isfinite(t_end) else t
+            t = nxt
+            continue
+        # Next completion event.
+        dt = np.inf
+        for res, task in serving.items():
+            rate = _resource_rate(res, mu_node, mu_link)
+            if rate <= 0:
+                raise RuntimeError(
+                    f"job with priority {task.prio} scheduled on dead "
+                    f"resource {res}")
+            dt = min(dt, task.remaining / rate)
+        nxt_arr = min((task.arrived for task in tasks
+                       if not task.done and task.arrived > t + 1e-18),
+                      default=np.inf)
+        dt = min(dt, nxt_arr - t)
+        clipped = t + dt >= t_end
+        if clipped:
+            dt = t_end - t  # serve the final partial slice, then stop
+        t += dt
+        for res, task in serving.items():
+            rate = _resource_rate(res, mu_node, mu_link)
+            task.remaining -= rate * dt
+            if task.remaining <= 1e-12 * max(1.0, task.stages[task.ptr][1]):
+                task.remaining = None
+                task.ptr += 1
+                task.arrived = t
+                if task.ptr >= len(task.stages):
+                    task.done = True
+                    task.completion = t
+        if clipped:
+            return t_end
+    return t
+
+
 def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,
              paths: dict[int, list[list[tuple[int, int]]]] | None = None) -> SimResult:
     """Event-driven simulation of the routed jobs in the actual system.
@@ -89,73 +222,10 @@ def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,
 
     mu_node = np.asarray(net.mu_node, np.float64)
     mu_link = np.asarray(net.mu_link, np.float64)
-    comp = np.asarray(batch.comp, np.float64)
-    data = np.asarray(batch.data, np.float64)
-    nl = np.asarray(batch.num_layers)
     J = batch.num_jobs
-
     prio_of = {int(order[p]): p for p in range(len(order))}
-    a = np.asarray(assign)
-
-    # Build each job's stage list: (resource_key, work, rate)
-    stages: dict[int, list[tuple[tuple, float, float]]] = {}
-    for j in range(J):
-        L = int(nl[j])
-        st: list[tuple[tuple, float, float]] = []
-        for l in range(L + 1):
-            for (u, v) in paths[j][l]:
-                st.append((("link", u, v), float(data[j, l]), mu_link[u, v]))
-            if l < L:
-                u = int(a[j, l])
-                st.append((("node", u), float(comp[j, l]), mu_node[u]))
-        stages[j] = st
-
-    ptr = {j: 0 for j in range(J)}            # current stage index
-    remaining = {j: None for j in range(J)}   # remaining work of current stage
-    arrived = {j: 0.0 for j in range(J)}      # arrival time at current stage
-    done = {j: len(stages[j]) == 0 for j in range(J)}
-    completion = np.zeros((J,), np.float64)
-    t = 0.0
-    guard = 0
-    while not all(done.values()):
-        guard += 1
-        if guard > 1_000_000:
-            raise RuntimeError("simulator did not converge")
-        # Highest-priority arrived task per resource.
-        serving: dict[tuple, int] = {}
-        for j in range(J):
-            if done[j] or arrived[j] > t + 1e-18:
-                continue
-            res, work, rate = stages[j][ptr[j]]
-            if remaining[j] is None:
-                remaining[j] = work
-            cur = serving.get(res)
-            if cur is None or prio_of[j] < prio_of[cur]:
-                serving[res] = j
-        if not serving:
-            # advance to next arrival
-            pending = [arrived[j] for j in range(J) if not done[j]]
-            t = min(pending)
-            continue
-        # Next completion event.
-        dt = np.inf
-        for res, j in serving.items():
-            rate = stages[j][ptr[j]][2]
-            if rate <= 0:
-                raise RuntimeError(f"job {j} scheduled on dead resource {res}")
-            dt = min(dt, remaining[j] / rate)
-        nxt_arr = min((arrived[j] for j in range(J)
-                       if not done[j] and arrived[j] > t + 1e-18), default=np.inf)
-        dt = min(dt, nxt_arr - t)
-        t += dt
-        for res, j in serving.items():
-            rate = stages[j][ptr[j]][2]
-            remaining[j] -= rate * dt
-            if remaining[j] <= 1e-12 * max(1.0, stages[j][ptr[j]][1]):
-                remaining[j] = None
-                ptr[j] += 1
-                arrived[j] = t
-                if ptr[j] >= len(stages[j]):
-                    done[j] = True
-                    completion[j] = t
+    stages = job_stages(batch, assign, paths)
+    tasks = [TaskRun(stages=stages[j], prio=prio_of[j]) for j in range(J)]
+    run_event_loop(tasks, mu_node, mu_link)
+    completion = np.array([task.completion for task in tasks], np.float64)
     return SimResult(completion=completion, makespan=float(np.max(completion)))

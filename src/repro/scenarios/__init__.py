@@ -72,11 +72,20 @@ class Scenario:
 
     def sample_jobs(self, rng: np.random.Generator,
                     n: int = 1) -> list[J.InferenceJob]:
+        # Names end in a monotonic per-instance sequence number, not the
+        # batch index: completion tracking keys on job names (the
+        # exact-drain ledger rejects repeats), and the 30-bit nonce alone
+        # has ~0.4% birthday-collision odds by 3k requests.  The nonce draw
+        # is kept as-is so the rng stream — and every recorded trajectory —
+        # stays bit-identical.
+        seq = getattr(self, "_name_seq", 0)
         out = []
         for i in range(n):
             src, dst = self.sample_src_dst(rng)
             out.append(self.traffic.sample(
-                rng, f"{self.name}-{int(rng.integers(1 << 30))}-{i}", src, dst))
+                rng, f"{self.name}-{int(rng.integers(1 << 30))}-{seq + i}",
+                src, dst))
+        object.__setattr__(self, "_name_seq", seq + n)  # frozen dataclass
         return out
 
     @functools.cached_property

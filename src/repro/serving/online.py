@@ -4,13 +4,18 @@ The static path solves one batch against a snapshot of the queues.  This
 loop is the deployment setting: request batches arrive on a clock (Poisson,
 bursty, diurnal — ``repro.core.arrivals``), and before each batch is solved
 the scheduler **drains** the :class:`~repro.core.state.QueueState` to the
-arrival time (fluid q <- max(q - mu dt, 0)) — the work committed by earlier
-batches has been getting served in the meantime.  Under sub-capacity load
-this keeps backlogs (and hence latency bounds) bounded; the legacy no-drain
-commit loop (``drain=False``, the seed behaviour) only ever adds to Q and
+arrival time — the work committed by earlier batches has been getting
+served in the meantime.  Two drain models are supported (``drain="fluid" |
+"exact"``): the fluid model q <- max(q - mu dt, 0) serves every resource
+independently at full rate (fast, optimistic), while the exact model
+drains a :class:`~repro.core.completions.CommittedWork` ledger through the
+event simulator's preempt-resume loop — exactly the committed jobs, with
+priority and precedence.  Under sub-capacity load either keeps backlogs
+(and hence latency bounds) bounded; the legacy no-drain commit loop
+(``drain_queues=False``, the seed behaviour) only ever adds to Q and
 diverges under any sustained traffic — ``benchmarks/online_bench.py``
-captures both trajectories and ``tests/test_online.py`` asserts the
-contrast.
+captures both trajectories plus the fluid-vs-exact fidelity gap, and
+``tests/test_online.py`` asserts the contrast.
 
 ``report_slowdown`` / ``replan_last`` are events on the same clock: a
 straggler reported at time t degrades the *effective* topology from t on
@@ -28,7 +33,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import arrivals as A, jobs as J
+from repro.core import arrivals as A, completions as C, jobs as J
 from repro.core.state import Topology, backlog_seconds
 from .scheduler import Placement, Request, RoutedScheduler, requests_to_jobs
 
@@ -47,10 +52,22 @@ class ArrivalRecord:
 
 @dataclasses.dataclass
 class OnlineTrace:
-    """Recorded trajectory of one online run."""
+    """Recorded trajectory of one online run.
+
+    ``completions`` holds absolute completion times recorded by the exact
+    drain (keyed by job name); ``replay_completions`` holds the
+    ground-truth full-horizon event replay of the commit log (when the run
+    tracked commits).  ``commit_log`` is that never-drained
+    :class:`~repro.core.completions.CommittedWork` record itself — the
+    fidelity benchmark replays it under exact semantics.
+    """
 
     records: list[ArrivalRecord] = dataclasses.field(default_factory=list)
     events: list[dict] = dataclasses.field(default_factory=list)
+    completions: dict[str, float] = dataclasses.field(default_factory=dict)
+    replay_completions: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    commit_log: "C.CommittedWork | None" = None
 
     @property
     def times(self) -> np.ndarray:
@@ -70,21 +87,39 @@ class OnlineTrace:
         lat = self.latencies
         return float(np.percentile(lat, q)) if lat.size else float("nan")
 
-    def backlog_growth(self) -> float:
+    def backlog_growth(self, tol: float = 1e-9) -> float:
         """max backlog over the run's second half / first half.
 
         ~1 for a stable (drained) system that has reached steady state;
-        grows without bound for the no-drain commit loop.
+        grows without bound for the no-drain commit loop.  A run whose
+        backlog never exceeds ``tol`` in *either* half (low-load streams
+        that fully drain between arrivals) is flat by definition and
+        returns exactly 1.0 — dividing by the floor would report a
+        meaningless ~1e12 "growth" from numerical dust.
         """
         b = self.backlogs
         if b.size < 4:
             return float("nan")
         half = b.size // 2
-        first = max(b[:half].max(), 1e-12)
-        return float(b[half:].max() / first)
+        first, second = float(b[:half].max()), float(b[half:].max())
+        if first <= tol and second <= tol:
+            return 1.0
+        return float(second / max(first, 1e-12))
+
+    def actual_latencies(self) -> np.ndarray:
+        """Per-request *actual* latency (completion - arrival), aligned with
+        :attr:`latencies` where completion times are known.
+
+        Uses the exact drain's recorded completions, falling back to the
+        ground-truth replay record; requests with no known completion are
+        skipped (run with ``finish=True`` to complete every job).
+        """
+        comps = self.completions or self.replay_completions
+        return np.array([comps[n] - r.time for r in self.records
+                         for n in r.names if n in comps], np.float64)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "arrivals": len(self.records),
             "requests": int(self.latencies.size),
             "p50_latency_s": self.percentile(50),
@@ -93,6 +128,11 @@ class OnlineTrace:
             "final_backlog_s": self.records[-1].backlog_after if self.records else 0.0,
             "backlog_growth": self.backlog_growth(),
         }
+        act = self.actual_latencies()
+        if act.size:
+            out["p50_actual_s"] = float(np.percentile(act, 50))
+            out["p99_actual_s"] = float(np.percentile(act, 99))
+        return out
 
     def to_dict(self) -> dict:
         return {
@@ -107,9 +147,11 @@ class OnlineTrace:
 class OnlineScheduler(RoutedScheduler):
     """RoutedScheduler + a clock: drains state to each event before acting.
 
-    ``drain=False`` reproduces the legacy behaviour (queues only grow) for
-    divergence comparisons; everything else is identical, so any gap between
-    the two runs is the drain semantics alone.
+    ``drain_queues=False`` reproduces the legacy behaviour (queues only
+    grow) for divergence comparisons; ``drain="fluid" | "exact"`` picks the
+    drain *model* (rate-capacity fluid vs per-plan completion tracking —
+    see :mod:`repro.core.completions`); everything else is identical, so
+    any gap between two runs is the drain semantics alone.
     """
 
     def __init__(self, net: Topology, *, method: str = "greedy",
@@ -134,8 +176,8 @@ class OnlineScheduler(RoutedScheduler):
             raise ValueError(f"time went backwards: {t} < {self.now}")
         dt = max(t - self.now, 0.0)
         if dt > 0 and self.drain_queues:
-            # drains at effective (health-aware) rates
-            self.state = self.state.advance(self._effective_topology(), dt)
+            # drains at effective (health-aware) rates, fluid or exact
+            self._drain_state(dt)
         self._now = max(self._now, float(t))
         self._stamp_clock()
 
@@ -165,7 +207,9 @@ class OnlineScheduler(RoutedScheduler):
     def report_slowdown(self, node: int, factor: float,
                         *, at: float | None = None) -> None:
         """Straggler event on the clock: drain to ``at`` (default: now),
-        then degrade the node's effective rate from that instant on."""
+        then degrade the node's effective rate from that instant on
+        (``factor=2`` means half speed; must be finite and > 0)."""
+        self._check_slowdown(node, factor)  # reject before the clock moves
         if at is not None:
             self.advance_to(at)
         super().report_slowdown(node, factor)
@@ -177,13 +221,66 @@ class OnlineScheduler(RoutedScheduler):
         if out is not None:
             self.trace.events.append({"time": self.now, "event": "replan",
                                       "bound_s": self.last_plan.bound()})
+            # The last arrival record described the superseded plan; refresh
+            # it so bound-vs-actual comparisons stay honest.  The new bound
+            # is measured from *now*, so from the original arrival instant
+            # the completion bound is (now - arrival) + new bound.
+            rec = self.trace.records[-1] if self.trace.records else None
+            if rec is not None and set(rec.names) == {p.job_name
+                                                      for p in out}:
+                bound_by_name = {p.job_name: p.bound_s for p in out}
+                wait = self.now - rec.time
+                self.trace.records[-1] = dataclasses.replace(
+                    rec,
+                    latencies=tuple(wait + bound_by_name[n]
+                                    for n in rec.names),
+                    backlog_after=backlog_seconds(
+                        self._effective_topology(), self.state))
         return out
+
+    # -- end-of-run accounting -----------------------------------------------
+    def finish(self) -> dict[str, float]:
+        """Serve all committed work to completion under exact semantics.
+
+        Requires ``drain="exact"``.  The clock jumps to the last
+        completion, the queues empty, and every job's absolute completion
+        time lands in ``trace.completions`` (and is returned).
+        """
+        if self.ledger is None:
+            raise ValueError("finish() requires drain='exact'")
+        comps, self.ledger = C.run_to_completion(
+            self._effective_topology(), self.ledger)
+        self._sync_ledger_queues()
+        if comps:
+            self._now = max(self._now, max(comps.values()))
+        self._stamp_clock()
+        self.trace.completions.update(comps)
+        return comps
+
+    def replay_ground_truth(self) -> dict[str, float]:
+        """Full-horizon event replay of every committed plan.
+
+        Requires ``track_commits=True``.  Replays the never-drained commit
+        log through the event simulator at current effective health (one
+        topology for the whole horizon — piecewise health histories are
+        approximated by their final segment) and records the results in
+        ``trace.replay_completions``.
+        """
+        if self.commit_log is None:
+            raise ValueError("replay_ground_truth() requires "
+                             "track_commits=True")
+        comps, _ = C.run_to_completion(self._effective_topology(),
+                                       self.commit_log)
+        self.trace.replay_completions.update(comps)
+        self.trace.commit_log = self.commit_log
+        return comps
 
 
 def run_online(scenario, *, horizon: float, seed: int = 0,
-               process: str = "poisson", rate: float = 1.0,
+               process: str = "poisson", rate: float | None = None,
                batch_size: int = 1, method: str = "greedy",
-               drain_queues: bool = True, pad_to: int | None = None,
+               drain_queues: bool = True, finish: bool = False,
+               pad_to: int | None = None,
                process_params: dict | None = None,
                **solver_opts) -> OnlineTrace:
     """Drive a scenario through an arrival stream; return the trace.
@@ -191,14 +288,41 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     ``scenario`` is anything with ``.topology`` and
     ``.sample_jobs(rng, n) -> list[InferenceJob]`` —
     ``repro.scenarios.make_scenario(...)`` is the canonical source.
-    ``process``/``rate`` name an arrival process from
-    ``repro.core.arrivals`` (``rate`` is ignored by processes that take
-    their own rate parameters via ``process_params``).
+
+    **Process-params contract.**  ``process`` names an arrival process from
+    ``repro.core.arrivals``; ``process_params`` are its keyword arguments,
+    passed through verbatim and always winning over the ``rate`` shorthand.
+    ``rate`` maps onto each built-in process's own parameters where the
+    mapping is well-defined:
+
+      * ``poisson`` / ``bursty`` — ``rate`` is the process's ``rate``;
+      * ``diurnal`` — ``rate`` scales the whole profile: ``peak_rate =
+        rate`` and ``base_rate = peak_rate / 5`` (the module defaults'
+        5:1 peak:base ratio) unless given explicitly;
+      * any other registered process — the shorthand is ambiguous, so
+        passing ``rate`` raises ``ValueError``; use ``process_params``.
+
+    ``drain_queues=False`` is the legacy no-drain baseline; pass
+    ``drain="fluid" | "exact"`` / ``track_commits=True`` through to the
+    scheduler to pick the drain model and keep a ground-truth commit log.
+    ``finish=True`` completes the accounting after the last arrival: the
+    exact ledger (if any) is served to completion into
+    ``trace.completions`` and the commit log (if any) is replayed into
+    ``trace.replay_completions``.
     """
     rng = np.random.default_rng(seed)
     params = dict(process_params or {})
-    if process in ("poisson", "bursty") and "rate" not in params:
-        params["rate"] = rate
+    if process in ("poisson", "bursty"):
+        if rate is not None:
+            params.setdefault("rate", rate)
+    elif process == "diurnal":
+        if rate is not None:
+            params.setdefault("peak_rate", rate)
+            params.setdefault("base_rate", params["peak_rate"] / 5.0)
+    elif rate is not None and process in A.available():
+        raise ValueError(
+            f"run_online(rate=...) has no defined mapping onto process "
+            f"{process!r}; pass its rate parameters via process_params=")
     times = A.make_process(process, **params)(rng, horizon)
     sched = OnlineScheduler(scenario.topology, method=method,
                             drain_queues=drain_queues, **solver_opts)
@@ -207,4 +331,10 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     for t in times:
         jobs = scenario.sample_jobs(rng, batch_size)
         sched.submit_jobs(float(t), jobs, pad_to=pad_to)
+    if finish:
+        if sched.ledger is not None:
+            sched.finish()
+        if sched.commit_log is not None:
+            sched.replay_ground_truth()
+    sched.trace.commit_log = sched.commit_log
     return sched.trace

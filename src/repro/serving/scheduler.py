@@ -9,9 +9,26 @@ queue vector Q the formulation charges waiting time against.
 Since the time-aware state split the scheduler holds the two parts
 explicitly: one immutable :class:`~repro.core.state.Topology` for the life
 of the deployment and a :class:`~repro.core.state.QueueState` that evolves
-— ``commit`` grows it, :meth:`RoutedScheduler.advance` drains it (fluid
-q <- max(q - mu dt, 0) while the clock runs).  Solvers see the zero-copy
-composed view ``topo.view(state)``; nothing rebuilds arrays.
+— ``commit`` grows it, :meth:`RoutedScheduler.advance` drains it while the
+clock runs.  Solvers see the zero-copy composed view ``topo.view(state)``;
+nothing rebuilds arrays.
+
+Two drain models are threaded through (``drain="fluid" | "exact"``):
+
+  * ``"fluid"`` (default, bit-identical to the pre-ledger behaviour):
+    every resource drains independently at full rate, q <- max(q - mu dt,
+    0).  Fast, optimistic — it serves link bytes whose producing compute
+    hasn't finished and node FLOPs out of priority order.
+  * ``"exact"``: a :class:`~repro.core.completions.CommittedWork` ledger
+    records every committed plan's work items (priority + precedence), and
+    time passing drains *exactly those jobs* through the preempt-resume
+    event loop the simulator uses.  The solver-visible ``QueueState`` is
+    materialized from the ledger's residual work, so every bound is charged
+    against committed work, not rate-capacity fluid.
+
+``track_commits=True`` additionally keeps a never-drained commit *log* (a
+second ledger) regardless of drain mode — the full-horizon ground-truth
+replay record the fidelity benchmark compares both models against.
 
 Every batch of inference requests is turned into InferenceJobs via the
 architecture cost profiles (configs/<arch>.cost_profile) and placed through
@@ -38,10 +55,23 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import jobs as J, network as N, solvers
+from repro.core import completions as C, jobs as J, network as N, solvers
 from repro.core.state import QueueState, Topology
 from repro.core.plan import Plan
 from repro.configs import registry
+
+
+def check_slowdown_factor(factor: float) -> float:
+    """Validate a straggler slowdown factor (the "factor=2 means half
+    speed" convention): must be finite and > 0, since the effective
+    topology divides by it — factor <= 0 would produce negative or
+    infinite capacities."""
+    factor = float(factor)
+    if not np.isfinite(factor) or factor <= 0:
+        raise ValueError(
+            f"slowdown factor must be finite and > 0 (factor=2 means half "
+            f"speed, factor=1 restores full health), got {factor}")
+    return factor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,13 +132,17 @@ class RoutedScheduler:
     drain_queues: bool = True  # OnlineScheduler's no-drain baseline flips this
 
     def __init__(self, net: N.ComputeNetwork | Topology, *,
-                 method: str = "greedy", **solver_opts):
+                 method: str = "greedy", drain: str = "fluid",
+                 track_commits: bool = False, **solver_opts):
         if isinstance(net, Topology):
             self.topology = net
             self.state = net.empty_state()
         else:
             self.topology = net.topology
             self.state = net.state
+        if drain not in ("fluid", "exact"):
+            raise ValueError(
+                f"drain must be 'fluid' or 'exact', got {drain!r}")
         self.method = method
         self.solver_opts = solver_opts
         # Authoritative clock, host-side float64: ``state.clock`` (f32, so it
@@ -116,9 +150,20 @@ class RoutedScheduler:
         # *stamped* from this, never summed.
         self._now = float(np.asarray(self.state.clock))
         self._slowdown = np.ones((self.topology.num_nodes,), np.float32)
-        # (batch, jobs, pre-batch state, health + clock at snapshot time)
+        self.drain_mode = drain
+        # Exact mode: the committed-work ledger is the source of truth for
+        # backlogs; the solver-visible QueueState is materialized from it.
+        self.ledger: C.CommittedWork | None = (
+            C.CommittedWork.empty(self.topology.num_nodes, clock=self._now)
+            if drain == "exact" else None)
+        # Optional never-drained commit log (ground-truth replay record).
+        self.commit_log: C.CommittedWork | None = (
+            C.CommittedWork.empty(self.topology.num_nodes, clock=self._now)
+            if track_commits else None)
+        # (batch, jobs, pre-batch state, health + clock + ledgers at snapshot)
         self._last: tuple[J.JobBatch, list[J.InferenceJob], QueueState,
-                          Topology, float] | None = None
+                          Topology, float, C.CommittedWork | None,
+                          C.CommittedWork | None] | None = None
         self.last_plan: Plan | None = None
 
     # -- compatibility views ------------------------------------------------
@@ -133,16 +178,47 @@ class RoutedScheduler:
         return self.topology.view()
 
     # -- cluster health / time ---------------------------------------------
+    def _check_slowdown(self, node: int, factor: float) -> float:
+        """Validate a slowdown event's arguments (raises ``ValueError``)."""
+        factor = check_slowdown_factor(factor)
+        if not (0 <= int(node) < self.topology.num_nodes):
+            raise ValueError(f"node {node} out of range "
+                             f"[0, {self.topology.num_nodes})")
+        return factor
+
     def report_slowdown(self, node: int, factor: float) -> None:
-        """Straggling slice: effective mu_u /= factor from now on."""
-        self._slowdown[node] = factor
+        """Straggling slice: effective mu_u /= factor from now on.
+
+        ``factor`` follows the "factor=2 means half speed" convention: the
+        node's effective capacity becomes mu_u / factor (it serves *and
+        drains* slower), ``factor=1`` restores full health.  Raises
+        ``ValueError`` for factor <= 0 or non-finite factors, and for a
+        node outside the topology.
+        """
+        self._slowdown[node] = self._check_slowdown(node, factor)
+
+    def _drain_state(self, dt: float) -> None:
+        """Advance backlogs ``dt`` seconds at effective (health-aware) rates
+        under the configured drain model.  Does not move the clock."""
+        if self.drain_mode == "exact":
+            self.ledger = C.drain_exact(self._effective_topology(),
+                                        self.ledger, dt)
+            self._sync_ledger_queues()
+        else:
+            self.state = self.state.advance(self._effective_topology(), dt)
+
+    def _sync_ledger_queues(self) -> None:
+        """Materialize the ledger's residual work into the QueueState."""
+        import jax.numpy as jnp
+        qn, ql = self.ledger.queue_arrays()
+        self.state = self.state.with_queues(jnp.asarray(qn), jnp.asarray(ql))
 
     def advance(self, dt: float) -> None:
-        """Let ``dt`` seconds pass: every resource drains at its effective
-        rate (slowed nodes drain slower) and the clock moves forward."""
+        """Let ``dt`` seconds pass: the backlog drains at effective rates
+        (fluid or exact per ``drain_mode``) and the clock moves forward."""
         if dt < 0:
             raise ValueError(f"dt must be >= 0, got {dt}")
-        self.state = self.state.advance(self._effective_topology(), dt)
+        self._drain_state(dt)
         self._now += float(dt)
         self._stamp_clock()
 
@@ -156,11 +232,18 @@ class RoutedScheduler:
         return self._now
 
     def drain(self) -> None:
-        """All scheduled work finished: reset queues (clock preserved)."""
+        """All scheduled work finished: reset queues (clock preserved).
+
+        In exact mode the ledger's live jobs are dropped without recording
+        completions; ``commit_log`` (a pure record of what was committed)
+        is left untouched.
+        """
         import jax.numpy as jnp
         self.state = self.state.with_queues(
             jnp.zeros_like(self.state.q_node),
             jnp.zeros_like(self.state.q_link))
+        if self.ledger is not None:
+            self.ledger = self.ledger.cleared()
         self._last = None
         self.last_plan = None
 
@@ -193,16 +276,48 @@ class RoutedScheduler:
         assert [p.priority for p in out] == list(range(len(out)))
         return out
 
-    def _solve_and_commit(self, batch: J.JobBatch) -> Plan:
+    def _solve_and_commit(self, batch: J.JobBatch,
+                          names: list[str] | None = None) -> Plan:
         topo = self._effective_topology()
+        pre_state = self.state
         plan = solvers.solve(topo, batch, method=self.method,
                              state=self.state, **self.solver_opts)
         if plan.net is None:  # e.g. the exact solver reports no queue state
             plan = dataclasses.replace(
                 plan, net=plan.commit(topo.view(self.state), batch))
-        # Committed backlogs come from the plan; the clock is ours to keep.
-        self.state = self.state.with_queues(plan.net.q_node, plan.net.q_link)
+        if self.ledger is None:
+            # Committed backlogs come from the plan; the clock is ours to
+            # keep.  (In exact mode the ledger sync below is authoritative,
+            # so the fluid commit would be a dead store.)
+            self.state = self.state.with_queues(plan.net.q_node,
+                                                plan.net.q_link)
+        if self.ledger is not None or self.commit_log is not None:
+            plan = self._ledger_commit(topo, batch, plan, pre_state, names)
         self.last_plan = plan
+        return plan
+
+    def _ledger_commit(self, topo: Topology, batch: J.JobBatch, plan: Plan,
+                       pre_state: QueueState,
+                       names: list[str] | None) -> Plan:
+        """Record the committed plan's work items (exact ledger and/or the
+        ground-truth commit log)."""
+        from repro.core import schedule
+        if plan.paths is None:
+            # Paths against the solve-time queue state — exactly the hops
+            # the plan's bounds charged (Alg. 1 / Alg. 2 semantics).
+            _, paths, _ = schedule.replay_solution(
+                topo.view(pre_state), batch, plan.assign, plan.order)
+            plan = dataclasses.replace(plan, paths=paths)
+        if self.ledger is not None:
+            self.ledger = self.ledger.commit(batch, plan, names=names,
+                                             at=self._now)
+            # Ledger is the source of truth in exact mode: rounding of the
+            # committed queues must match what later drains will report.
+            self._sync_ledger_queues()
+        if self.commit_log is not None:
+            self.commit_log = self.commit_log.commit(batch, plan,
+                                                     names=names,
+                                                     at=self._now)
         return plan
 
     def schedule_jobs(self, infer_jobs: list[J.InferenceJob],
@@ -210,11 +325,14 @@ class RoutedScheduler:
         """Place pre-built :class:`InferenceJob`s (the online loop's path)."""
         batch = J.batch_jobs(infer_jobs, pad_to=pad_to)
         pre_state = self.state
-        plan = self._solve_and_commit(batch)
+        pre_ledger, pre_log = self.ledger, self.commit_log
+        plan = self._solve_and_commit(batch,
+                                      names=[j.name for j in infer_jobs])
         # Record only after the solve succeeds, so a raising solver can't
         # poison replan_last() with a batch that was never scheduled.
         self._last = (batch, infer_jobs, pre_state,
-                      self._effective_topology(), self._now)
+                      self._effective_topology(), self._now,
+                      pre_ledger, pre_log)
         return self._placements(plan, infer_jobs)
 
     def schedule(self, requests: list[Request]) -> list[Placement]:
@@ -230,7 +348,8 @@ class RoutedScheduler:
         """
         if self._last is None:
             return None
-        batch, infer_jobs, pre_state, pre_topo, pre_now = self._last
+        (batch, infer_jobs, pre_state, pre_topo, pre_now,
+         pre_ledger, pre_log) = self._last
         # Pre-batch backlogs, drained over the time elapsed since they were
         # captured (work that was genuinely served must not resurrect) at the
         # *snapshot-time* health — the rates that actually applied until the
@@ -238,9 +357,21 @@ class RoutedScheduler:
         # report_slowdown-then-replan flow; piecewise health histories are
         # approximated by their first segment).  The clock never rolls back.
         elapsed = self._now - pre_now
-        if elapsed > 0 and self.drain_queues:
-            pre_state = pre_state.advance(pre_topo, elapsed)
-        self.state = pre_state
+        if self.drain_mode == "exact":
+            ledger = pre_ledger
+            if elapsed > 0 and self.drain_queues:
+                ledger = C.drain_exact(pre_topo, ledger, elapsed)
+            self.ledger = ledger
+            self.state = pre_state
+            self._sync_ledger_queues()
+        else:
+            if elapsed > 0 and self.drain_queues:
+                pre_state = pre_state.advance(pre_topo, elapsed)
+            self.state = pre_state
+        # The superseded batch never ran to completion: drop it from the
+        # ground-truth record too (same approximation as the state rollback).
+        self.commit_log = pre_log
         self._stamp_clock()
-        plan = self._solve_and_commit(batch)
+        plan = self._solve_and_commit(batch,
+                                      names=[j.name for j in infer_jobs])
         return self._placements(plan, infer_jobs)

@@ -1,6 +1,8 @@
 """Online serving loop: arrival processes, queue draining keeps backlog
 bounded under sub-capacity load (while the legacy no-drain loop diverges),
 and straggler/replan events on the clock."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -176,6 +178,75 @@ def test_slowdown_slows_draining():
     q_fast = float(np.asarray(fast.state.q_node)[hot])
     q_slow = float(np.asarray(slow.state.q_node)[hot])
     assert q_slow > q_fast  # drained at mu/10 instead of mu
+
+
+# -- bugfix regressions ------------------------------------------------------
+
+def test_backlog_growth_flat_zero_run_is_one():
+    """Low-load runs whose backlog is all ~zero must report growth 1.0, not
+    the ~1e12 artifact of dividing by the 1e-12 floor."""
+    from repro.serving.online import ArrivalRecord, OnlineTrace
+    tr = OnlineTrace(records=[
+        ArrivalRecord(time=float(i), names=(f"r{i}",), latencies=(0.1,),
+                      backlog_before=0.0, backlog_after=0.0, solve_s=0.0)
+        for i in range(8)])
+    assert tr.backlog_growth() == 1.0
+    # ...but genuine growth from a ~zero first half still reads as huge
+    tr.records[-1] = dataclasses.replace(tr.records[-1], backlog_after=5.0)
+    assert tr.backlog_growth() > 1e6
+
+
+def test_run_online_rate_scales_diurnal():
+    """run_online(rate=) must drive the diurnal process (peak_rate=rate,
+    base_rate=rate/5), not be silently dropped."""
+    sc = make_scenario("star", seed=0)
+    rate = sc.nominal_rate(0.4)
+    lo = run_online(sc, horizon=10 / rate, seed=5, process="diurnal",
+                    rate=rate)
+    hi = run_online(sc, horizon=10 / rate, seed=5, process="diurnal",
+                    rate=4 * rate)
+    assert len(hi.records) > len(lo.records) >= 1
+    # explicit process_params always win over the shorthand
+    explicit = run_online(sc, horizon=10 / rate, seed=5, process="diurnal",
+                          rate=4 * rate,
+                          process_params={"peak_rate": rate,
+                                          "base_rate": rate / 5})
+    assert len(explicit.records) == len(lo.records)
+
+
+def test_run_online_rate_rejected_for_unknown_mapping():
+    """A registered process with no defined rate mapping must reject the
+    shorthand instead of silently ignoring it."""
+    from repro.core import arrivals as A
+
+    @A.register_process("every-second")
+    def _every_second(gap: float = 1.0):
+        return lambda rng, horizon: np.arange(0.0, horizon, gap)
+
+    sc = make_scenario("star", seed=0)
+    try:
+        with pytest.raises(ValueError, match="no defined mapping"):
+            run_online(sc, horizon=3.0, process="every-second", rate=2.0)
+        tr = run_online(sc, horizon=3.0, process="every-second",
+                        process_params={"gap": 1.0})
+        assert len(tr.records) == 3
+    finally:
+        A._PROCESSES.pop("every-second", None)
+
+
+def test_report_slowdown_rejects_nonpositive_factor():
+    """factor <= 0 or non-finite would flip 1/factor into negative or
+    infinite effective capacity; the convention is factor=2 == half speed."""
+    _, sched = _edge_cloud_sched()
+    sched.advance_to(1.0)
+    for bad in (0.0, -2.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="slowdown factor"):
+            sched.report_slowdown(0, bad, at=5.0)
+    # the invalid event must not have moved the clock or logged an event
+    assert sched.now == pytest.approx(1.0)
+    assert sched.trace.events == []
+    sched.report_slowdown(0, 2.0, at=5.0)  # valid: half speed
+    assert sched.now == pytest.approx(5.0)
 
 
 def test_trace_to_dict_roundtrips_json():

@@ -122,6 +122,40 @@ def test_engine_generates():
         eng.generate(prompts, gen_len=8, prefill_mode="bogus")
 
 
+def test_report_slowdown_validates_inputs():
+    """factor must be finite and > 0 (factor=2 == half speed); node must be
+    in range.  Invalid reports leave health untouched."""
+    import pytest
+
+    sched = RoutedScheduler(_cluster())
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        with pytest.raises(ValueError, match="slowdown factor"):
+            sched.report_slowdown(1, bad)
+    with pytest.raises(ValueError, match="out of range"):
+        sched.report_slowdown(99, 2.0)
+    assert (sched._slowdown == 1.0).all()
+    sched.report_slowdown(1, 2.0)
+    assert sched._slowdown[1] == 2.0
+
+
+def test_scheduler_exact_drain_end_to_end():
+    """drain='exact' on the request path: placements come out the same shape,
+    advance() drains the ledger, and full drain empties the queues."""
+    sched = RoutedScheduler(_cluster(), drain="exact")
+    plans = sched.schedule([Request("smollm_135m", 0, 5, name=f"r{i}")
+                            for i in range(3)])
+    assert [p.priority for p in plans] == [0, 1, 2]
+    assert len(sched.ledger.jobs) == 3
+    q0 = float(np.asarray(sched.state.q_node).sum())
+    assert q0 > 0
+    sched.advance(1e-3)
+    assert float(np.asarray(sched.state.q_node).sum()) < q0
+    sched.advance(1e9)  # plenty of time: everything completes
+    assert not sched.ledger.jobs and len(sched.ledger.completed) == 3
+    assert float(np.asarray(sched.state.q_node).max()) == 0.0
+    assert float(np.asarray(sched.state.q_link).max()) == 0.0
+
+
 def test_scheduler_advance_drains_queues():
     """Time passing drains the committed backlog at effective rates."""
     sched = RoutedScheduler(_cluster())
