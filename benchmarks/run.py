@@ -33,8 +33,8 @@ def main() -> None:
         dt = time.time() - t0
         results.append((name, dt * 1e6, derive(rows)))
 
-    from . import bound_gap, fig5_small, fig_large, kernel_bench, \
-        online_bench, roofline, runtime_scaling, solver_compare
+    from . import bound_gap, drain_bench, fig5_small, fig_large, \
+        kernel_bench, online_bench, roofline, runtime_scaling, solver_compare
 
     def _solver_ratio(rows):
         by = {r["method"]: r for r in rows}
@@ -53,6 +53,11 @@ def main() -> None:
                      f"exact_holds={r['all_exact_bounds_hold']},"
                      f"gap={r['rows'][0]['backlog_gap_mean_s']:.4f}s")
           if r and r.get("rows") else "n/a")
+    bench("drain", lambda: drain_bench.run(smoke=True),
+          lambda r: (f"match={r['all_indexed_match_ref']},"
+                     f"loop={r['headline']['loop_speedup']:.2f}x,"
+                     f"replay={r['headline']['replay_speedup']:.1f}x")
+          if r else "n/a")
     bench("fig5_small", fig5_small.run,
           lambda r: f"sim@1e-4={r[0]['greedy_sim']:.1f}s" if r else "n/a")
     bench("fig_large", fig_large.run,

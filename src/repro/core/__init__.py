@@ -19,9 +19,12 @@ from .solvers import Solver, solve, register as register_solver, \
 from .greedy import GreedySolution, greedy_route
 from .annealing import SAResult, anneal, evaluate_solution
 from .schedule import SimResult, replay_solution, simulate
+from .eventsim import EventEngine
 from .completions import (CommittedWork, LedgerJob, drain_exact,
+                          exact_backlog_trace, replay_piecewise,
                           run_to_completion)
-from . import bounds, completions, exact, layered_graph, shortest_path, solvers
+from . import (bounds, completions, eventsim, exact, layered_graph,
+               shortest_path, solvers)
 
 __all__ = [
     "ComputeNetwork", "INF", "make_network", "small_topology", "us_backbone",
@@ -35,8 +38,9 @@ __all__ = [
     "Plan", "Solver", "solve", "register_solver", "available_solvers",
     "GreedySolution", "greedy_route",  # deprecated alias + legacy name
     "SAResult", "anneal", "evaluate_solution",
-    "SimResult", "replay_solution", "simulate",
-    "CommittedWork", "LedgerJob", "drain_exact", "run_to_completion",
-    "bounds", "completions", "exact", "layered_graph", "shortest_path",
-    "solvers",
+    "SimResult", "replay_solution", "simulate", "EventEngine",
+    "CommittedWork", "LedgerJob", "drain_exact", "exact_backlog_trace",
+    "replay_piecewise", "run_to_completion",
+    "bounds", "completions", "eventsim", "exact", "layered_graph",
+    "shortest_path", "solvers",
 ]

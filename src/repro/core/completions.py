@@ -15,9 +15,8 @@ the :class:`~repro.core.state.QueueState` pytree: a ledger recording, per
 committed plan, each job's per-resource work items with its global priority
 and precedence (layer k's transfer cannot drain before layer k's compute
 completes — the stage order of :func:`repro.core.schedule.job_stages`).
-:func:`drain_exact` advances the ledger through the shared event loop
-(:func:`repro.core.schedule.run_event_loop`) a ``dt`` window at a time —
-the same preempt-resume semantics as the one-shot simulator, run
+:func:`drain_exact` advances the ledger with the same preempt-resume
+semantics as the one-shot simulator, a ``dt`` window at a time,
 incrementally between online arrivals.  The ledger is deliberately *not* a
 JAX pytree leaf container: the event loop is data-dependent control flow
 that belongs on the host; only the residual per-resource work it implies
@@ -27,6 +26,23 @@ that belongs on the host; only the residual per-resource work it implies
 All ledger operations are functional (they return new ledgers and never
 mutate tasks in place), so a scheduler can snapshot a ledger by reference —
 ``replan_last``'s rollback does exactly that.
+
+Two engines drive the drain (``engine="indexed" | "ref"`` on every entry
+point).  The default is the persistent indexed engine
+(:mod:`repro.core.eventsim`): each drained/committed ledger carries a
+*cache slot* pointing at the live engine, so consecutive windows reuse the
+indexes instead of rebuilding every ``TaskRun`` per arrival.  The slot is
+stamp-guarded and strictly linear — draining a ledger hands the engine to
+the *result* ledger and invalidates the input's slot, so an old snapshot
+(``replan_last``'s rollback, a branched what-if drain) simply rebuilds
+lazily from its immutable job records.  ``engine="ref"`` runs the seed
+linear-scan loop (:func:`repro.core.schedule.run_event_loop_ref`) — the
+parity reference ``benchmarks/drain_bench.py`` gates against.
+
+``health`` records ``report_slowdown`` events ``(time, node, factor)`` on
+the same log, so :func:`replay_piecewise` can replay the ground truth
+segment by segment at the topology that was actually in effect — not a
+single end-state topology for the whole horizon.
 
 Priorities are ledger-global: plans committed earlier hold strictly higher
 priority than later ones (each batch was solved against the queue state its
@@ -39,7 +55,7 @@ import dataclasses
 
 import numpy as np
 
-from . import schedule
+from . import eventsim, schedule
 from .state import QueueState, Topology
 
 
@@ -79,10 +95,23 @@ class CommittedWork:
     # Completion records are keyed by job name, so names must be unique for
     # the lifetime of the ledger; commit() enforces it against this set.
     names_seen: frozenset[str] = frozenset()
+    # Health history: (absolute time, node, slowdown factor) events, in
+    # record order.  A pure annotation — drains ignore it (the caller picks
+    # the effective topology per window); replay_piecewise() consumes it.
+    health: tuple[tuple[float, int, float], ...] = ()
 
     @classmethod
     def empty(cls, num_nodes: int, clock: float = 0.0) -> "CommittedWork":
         return cls(num_nodes=int(num_nodes), clock=float(clock))
+
+    def record_slowdown(self, at: float, node: int,
+                        factor: float) -> "CommittedWork":
+        """Annotate the log with a health event (``factor=2`` = half speed,
+        the scheduler's convention); replay_piecewise() replays segment by
+        segment at the recorded factors."""
+        return dataclasses.replace(
+            self, health=self.health + ((float(at), int(node),
+                                         float(factor)),))
 
     # -- committing plans -----------------------------------------------------
     def commit(self, batch, plan, *, names=None,
@@ -112,6 +141,7 @@ class CommittedWork:
         stages = schedule.job_stages(batch, plan.assign, plan.paths)
         order = plan.order
         jobs = list(self.jobs)
+        added: list[LedgerJob] = []
         seen = set(self.names_seen)
         for slot in range(plan.num_jobs):
             j = int(order[slot])
@@ -123,11 +153,21 @@ class CommittedWork:
                     f"on job names, which must be unique per ledger — give "
                     f"requests/jobs distinct names")
             seen.add(name)
-            jobs.append(LedgerJob(name=name, prio=prio, release=at,
-                                  stages=tuple(stages[j]), arrived=at))
-        return dataclasses.replace(
+            added.append(LedgerJob(name=name, prio=prio, release=at,
+                                   stages=tuple(stages[j]), arrived=at))
+        jobs.extend(added)
+        new = dataclasses.replace(
             self, jobs=tuple(jobs), next_prio=self.next_prio + plan.num_jobs,
             names_seen=frozenset(seen))
+        eng = _engine_of(self)
+        if eng is not None:
+            try:
+                eng.commit(added)  # extend the live index in place
+            except Exception:
+                eng.stamp += 1     # poison the half-extended index
+                raise
+            _attach(new, eng)
+        return new
 
     def cleared(self) -> "CommittedWork":
         """Drop all live jobs without recording completions (a scheduler's
@@ -141,8 +181,13 @@ class CommittedWork:
         The exact-model counterpart of the fluid backlogs: the current
         stage's residual plus every not-yet-started stage of every live
         job, charged to its resource.  float32, ready for
-        ``QueueState.with_queues``.
+        ``QueueState.with_queues``.  A ledger carrying a live engine reads
+        the incrementally maintained arrays (O(V^2), no job rescan).
         """
+        eng = _engine_of(self)
+        if eng is not None:
+            qn, ql = eng.eng.queue_arrays()
+            return qn.astype(np.float32), ql.astype(np.float32)
         qn = np.zeros((self.num_nodes,), np.float64)
         ql = np.zeros((self.num_nodes, self.num_nodes), np.float64)
         for job in self.jobs:
@@ -172,11 +217,14 @@ class CommittedWork:
         return _bs(topo, self.queue_state())
 
 
+def _task_of(job: LedgerJob) -> schedule.TaskRun:
+    return schedule.TaskRun(stages=list(job.stages), prio=job.prio,
+                            ptr=job.ptr, remaining=job.remaining,
+                            arrived=job.arrived)
+
+
 def _tasks_of(ledger: CommittedWork) -> list[schedule.TaskRun]:
-    return [schedule.TaskRun(stages=list(job.stages), prio=job.prio,
-                             ptr=job.ptr, remaining=job.remaining,
-                             arrived=job.arrived)
-            for job in ledger.jobs]
+    return [_task_of(job) for job in ledger.jobs]
 
 
 def _fold(ledger: CommittedWork, tasks: list[schedule.TaskRun],
@@ -195,13 +243,132 @@ def _fold(ledger: CommittedWork, tasks: list[schedule.TaskRun],
                                completed=tuple(done))
 
 
-def drain_exact(topo: Topology, ledger: CommittedWork, dt) -> CommittedWork:
+# -- the persistent engine cache ----------------------------------------------
+#
+# A drained/committed ledger may carry a live indexed engine in a slot set
+# with object.__setattr__ (not a dataclass field: dataclasses.replace()
+# must NOT copy it onto unrelated successors, and it never serializes).
+# The slot is stamp-guarded: using the engine (drain, commit) hands it to
+# the result ledger and bumps the stamp, so every stale snapshot — a
+# replan rollback, a branched what-if drain — fails the stamp check and
+# lazily rebuilds from its own immutable job records instead.
+
+_ENGINE_SLOT = "_sim_engine"
+
+
+class _LedgerEngine:
+    """A persistent :class:`~repro.core.eventsim.EventEngine` plus the
+    ledger-side bookkeeping (names, fold cursors) to turn its state back
+    into :class:`CommittedWork` records."""
+
+    def __init__(self, ledger: CommittedWork, mu_node: np.ndarray,
+                 mu_link: np.ndarray):
+        self.eng = eventsim.EventEngine(mu_node, mu_link, clock=ledger.clock)
+        self.jobs: list[LedgerJob] = list(ledger.jobs)
+        self.names: list[str] = [j.name for j in self.jobs]
+        self._live: list[int] = list(range(len(self.jobs)))
+        self._folded = 0   # completions already folded into the chain
+        self.stamp = 0
+        self.eng.add_tasks([_task_of(j) for j in ledger.jobs])
+
+    def commit(self, added: list[LedgerJob]) -> None:
+        base = len(self.jobs)
+        self.jobs.extend(added)
+        self.names.extend(j.name for j in added)
+        self._live.extend(range(base, len(self.jobs)))
+        self.eng.add_tasks([_task_of(j) for j in added])
+
+    def bloated(self) -> bool:
+        """Completed-task shells now outweigh the live set: retaining the
+        cache costs more memory than a lazy re-index of the live jobs, so
+        the caller should drop it (amortized O(1) work per job — the
+        engine would otherwise grow with every job ever served)."""
+        dead = len(self.jobs) - len(self._live)
+        return dead >= 2048 and dead > len(self._live)
+
+    def fold(self, ledger: CommittedWork, clock: float) -> CommittedWork:
+        """New ledger from the engine state — touches only live jobs, and
+        reuses each untouched job's record by reference."""
+        self.eng.materialize()
+        new_done = [(self.names[i], float(t))
+                    for i, t in self.eng.completions[self._folded:]]
+        self.eng.completions.clear()   # folded into the ledger chain
+        self._folded = 0
+        live_idx: list[int] = []
+        live_jobs: list[LedgerJob] = []
+        for i in self._live:
+            task = self.eng.tasks[i]
+            if task.done:
+                continue
+            job = self.jobs[i]
+            if (task.ptr != job.ptr or task.remaining != job.remaining
+                    or task.arrived != job.arrived):
+                job = dataclasses.replace(
+                    job, ptr=task.ptr,
+                    remaining=None if task.remaining is None
+                    else float(task.remaining),
+                    arrived=float(task.arrived))
+                self.jobs[i] = job
+            live_idx.append(i)
+            live_jobs.append(job)
+        self._live = live_idx
+        return dataclasses.replace(ledger, clock=float(clock),
+                                   jobs=tuple(live_jobs),
+                                   completed=ledger.completed
+                                   + tuple(new_done))
+
+
+def _attach(ledger: CommittedWork, eng: _LedgerEngine) -> CommittedWork:
+    eng.stamp += 1
+    object.__setattr__(ledger, _ENGINE_SLOT, (eng, eng.stamp))
+    return ledger
+
+
+def _engine_of(ledger: CommittedWork) -> _LedgerEngine | None:
+    slot = getattr(ledger, _ENGINE_SLOT, None)
+    if slot is None:
+        return None
+    eng, stamp = slot
+    return eng if eng.stamp == stamp else None
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in ("indexed", "ref"):
+        raise ValueError(
+            f"engine must be 'indexed' or 'ref', got {engine!r}")
+
+
+def _live_engine(ledger: CommittedWork, mu_node: np.ndarray,
+                 mu_link: np.ndarray) -> _LedgerEngine:
+    eng = _engine_of(ledger)
+    if eng is None:
+        eng = _LedgerEngine(ledger, mu_node, mu_link)
+    return eng
+
+
+def warm_engine(topo: Topology, ledger: CommittedWork) -> CommittedWork:
+    """Attach a live indexed engine to ``ledger`` if it lacks one.
+
+    The engine is otherwise born lazily at the first drain; the exact-mode
+    scheduler warms it at commit time instead, so the very first arrival's
+    queue materialization already reads the incremental index and every
+    later commit extends it in place.
+    """
+    if _engine_of(ledger) is None:
+        mu_node = np.asarray(topo.mu_node, np.float64)
+        mu_link = np.asarray(topo.mu_link, np.float64)
+        _attach(ledger, _LedgerEngine(ledger, mu_node, mu_link))
+    return ledger
+
+
+def drain_exact(topo: Topology, ledger: CommittedWork, dt, *,
+                engine: str = "indexed") -> CommittedWork:
     """Advance the ledger ``dt`` seconds with preempt-resume priority service.
 
     The exact counterpart of the fluid ``QueueState.advance``: every
     resource serves the highest-priority *ready* work item (precedence
-    respected, preempting on arrival, work-conserving), via the same event
-    loop as :func:`repro.core.schedule.simulate`.  Draining in chunks
+    respected, preempting on arrival, work-conserving), with the same
+    semantics as :func:`repro.core.schedule.simulate`.  Draining in chunks
     composes exactly: ``drain_exact(ledger, a)`` then ``b`` equals
     ``drain_exact(ledger, a + b)`` — the property tests assert it.
 
@@ -209,24 +376,45 @@ def drain_exact(topo: Topology, ledger: CommittedWork, dt) -> CommittedWork:
     the whole window, the same piecewise-constant-health approximation the
     fluid drain makes).  Jobs finishing inside the window move to
     ``ledger.completed`` with their completion instants.
+
+    ``engine="indexed"`` (default) runs on the persistent indexed engine —
+    the returned ledger carries the live index, so the next drain/commit
+    in the chain is incremental.  ``engine="ref"`` rebuilds ``TaskRun``
+    records and runs the seed linear-scan loop (the parity reference).
     """
+    _check_engine(engine)
     dt = float(dt)
     if dt < 0:
         raise ValueError(f"dt must be >= 0, got {dt}")
     t_end = ledger.clock + dt
     if dt == 0.0 or not ledger.jobs:
-        return dataclasses.replace(ledger, clock=t_end)
+        new = dataclasses.replace(ledger, clock=t_end)
+        eng = _engine_of(ledger)
+        if eng is not None:     # keep the index in step with the clock
+            eng.eng.now = t_end
+            _attach(new, eng)
+        return new
     mu_node = np.asarray(topo.mu_node, np.float64)
     mu_link = np.asarray(topo.mu_link, np.float64)
-    tasks = _tasks_of(ledger)
-    schedule.run_event_loop(tasks, mu_node, mu_link, t=ledger.clock,
-                            t_end=t_end)
-    return _fold(ledger, tasks, t_end)
+    if engine == "ref":
+        tasks = _tasks_of(ledger)
+        schedule.run_event_loop_ref(tasks, mu_node, mu_link, t=ledger.clock,
+                                    t_end=t_end)
+        return _fold(ledger, tasks, t_end)
+    eng = _live_engine(ledger, mu_node, mu_link)
+    try:
+        eng.eng.set_rates(mu_node, mu_link)
+        eng.eng.advance(t_end)
+    except Exception:
+        eng.stamp += 1   # poison the cache: rebuilds are always safe
+        raise
+    new = eng.fold(ledger, t_end)
+    return new if eng.bloated() else _attach(new, eng)
 
 
-def run_to_completion(topo: Topology,
-                      ledger: CommittedWork) -> tuple[dict[str, float],
-                                                      "CommittedWork"]:
+def run_to_completion(topo: Topology, ledger: CommittedWork, *,
+                      engine: str = "indexed") -> tuple[dict[str, float],
+                                                        "CommittedWork"]:
     """Serve every committed job to completion; the ground-truth replay.
 
     Returns ``({name: absolute completion time} — including jobs already
@@ -236,44 +424,123 @@ def run_to_completion(topo: Topology,
     live exact ledger it finishes the residual work — the two must agree,
     which the fidelity benchmark checks.
     """
+    _check_engine(engine)
     completions = dict(ledger.completed)
     if not ledger.jobs:
         return completions, ledger
     mu_node = np.asarray(topo.mu_node, np.float64)
     mu_link = np.asarray(topo.mu_link, np.float64)
-    tasks = _tasks_of(ledger)
-    t = schedule.run_event_loop(tasks, mu_node, mu_link, t=ledger.clock)
-    out = _fold(ledger, tasks, max(ledger.clock, t))
+    if engine == "ref":
+        tasks = _tasks_of(ledger)
+        t = schedule.run_event_loop_ref(tasks, mu_node, mu_link,
+                                        t=ledger.clock)
+        out = _fold(ledger, tasks, max(ledger.clock, t))
+    else:
+        eng = _live_engine(ledger, mu_node, mu_link)
+        try:
+            eng.eng.set_rates(mu_node, mu_link)
+            t = eng.eng.advance(np.inf)
+        except Exception:
+            eng.stamp += 1
+            raise
+        out = eng.fold(ledger, max(ledger.clock, float(t)))
+        if not eng.bloated():
+            _attach(out, eng)
     completions.update({name: when for name, when in out.completed})
     return completions, out
 
 
-def exact_backlog_trace(topo: Topology, log: CommittedWork,
-                        times) -> np.ndarray:
+def replay_piecewise(topo: Topology, log: CommittedWork, *,
+                     engine: str = "indexed") -> tuple[dict[str, float],
+                                                       "CommittedWork"]:
+    """Ground-truth replay honouring the log's recorded health history.
+
+    Drains the log segment by segment between its ``health`` events — each
+    window at the effective (straggler-scaled) topology that was actually
+    in force — then serves the final segment to completion.  With an empty
+    health log this is exactly :func:`run_to_completion` on the base
+    topology.  Returns the same ``(completions, drained ledger)`` pair.
+
+    The slowdown vector is maintained float32 and applied as
+    ``topo.scale_nodes(1 / factors)`` — bit-for-bit the scheduler's
+    ``_effective_topology``, so the replay sees the same rates the online
+    drains did.
+    """
+    import jax.numpy as jnp
+
+    slow = np.ones((log.num_nodes,), np.float32)
+    cur = log
+    for at, node, factor in sorted(log.health, key=lambda e: e[0]):
+        eff = topo.scale_nodes(1.0 / jnp.asarray(slow))
+        cur = drain_exact(eff, cur, max(float(at) - cur.clock, 0.0),
+                          engine=engine)
+        slow[int(node)] = factor
+    eff = topo.scale_nodes(1.0 / jnp.asarray(slow))
+    return run_to_completion(eff, cur, engine=engine)
+
+
+def _backlog_arrays(mu_node: np.ndarray, mu_link: np.ndarray,
+                    qn: np.ndarray, ql: np.ndarray) -> float:
+    """Worst-resource residual wait from raw numpy arrays (the host-side
+    counterpart of :func:`repro.core.state.backlog_seconds`)."""
+    node_wait = np.where(mu_node > 0, qn / np.maximum(mu_node, 1e-30), 0.0)
+    link_wait = np.where(mu_link > 0, ql / np.maximum(mu_link, 1e-30), 0.0)
+    return float(max(node_wait.max(initial=0.0), link_wait.max(initial=0.0)))
+
+
+def exact_backlog_trace(topo: Topology, log: CommittedWork, times, *,
+                        engine: str = "indexed") -> np.ndarray:
     """Exact-model backlog (s) just before each epoch of a commit log.
 
     Replays the *same plans* the log records — released at their commit
-    times — under :func:`drain_exact`, measuring the worst-resource
+    times — under exact drain semantics, measuring the worst-resource
     residual wait immediately before each ``times[i]`` (jobs committed at
     exactly ``times[i]`` are excluded, matching the online trace's
     ``backlog_before``).  Comparing against the fluid run's backlogs
     isolates the drain semantics: policy decisions are held fixed.
 
     ``log`` must be an undrained ledger (``track_commits=True`` keeps one).
+    The default engine makes this a *single forward pass*: one persistent
+    index over the whole horizon, jobs fed in as their releases pass, the
+    backlog read from the incrementally maintained queue arrays — the seed
+    rebuilt and rescanned the full ledger at every sample time
+    (``engine="ref"`` keeps that behaviour as the parity reference).
     """
+    _check_engine(engine)
     jobs = sorted(log.jobs, key=lambda j: j.prio)
     if any(j.ptr or j.remaining is not None for j in jobs):
         raise ValueError("exact_backlog_trace needs an undrained commit log")
-    cur = dataclasses.replace(log, jobs=(), completed=())
+    if engine == "ref":
+        cur = dataclasses.replace(log, jobs=(), completed=())
+        out = []
+        k = 0
+        for t in np.asarray(times, np.float64):
+            t = float(t)
+            add = []
+            while (k < len(jobs)
+                   and jobs[k].release < t - schedule.time_eps(t)):
+                add.append(jobs[k])
+                k += 1
+            if add:
+                cur = dataclasses.replace(cur, jobs=cur.jobs + tuple(add))
+            cur = drain_exact(topo, cur, max(t - cur.clock, 0.0),
+                              engine="ref")
+            out.append(cur.backlog_seconds(topo))
+        return np.asarray(out, np.float64)
+    mu_node = np.asarray(topo.mu_node, np.float64)
+    mu_link = np.asarray(topo.mu_link, np.float64)
+    eng = eventsim.EventEngine(mu_node, mu_link, clock=log.clock)
     out = []
     k = 0
     for t in np.asarray(times, np.float64):
+        t = float(t)
         add = []
-        while k < len(jobs) and jobs[k].release < t - 1e-12:
+        while k < len(jobs) and jobs[k].release < t - schedule.time_eps(t):
             add.append(jobs[k])
             k += 1
         if add:
-            cur = dataclasses.replace(cur, jobs=cur.jobs + tuple(add))
-        cur = drain_exact(topo, cur, max(float(t) - cur.clock, 0.0))
-        out.append(cur.backlog_seconds(topo))
+            eng.add_tasks([_task_of(j) for j in add])
+        eng.advance(max(t, eng.now))
+        qn, ql = eng.queue_arrays()
+        out.append(_backlog_arrays(mu_node, mu_link, qn, ql))
     return np.asarray(out, np.float64)

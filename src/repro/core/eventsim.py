@@ -1,0 +1,324 @@
+"""Indexed preempt-resume event engine: the exact drain's hot path.
+
+The reference loop (:func:`repro.core.schedule.run_event_loop_ref`) rescans
+every task at every event to rebuild the per-resource serving heads —
+O(events x tasks), with every resource's rate looked up per event.  That is
+fine for one-shot simulation of a small batch, but the online serving loop
+in exact-drain mode runs it *per arrival*, over every live committed job,
+at us-backbone:lm scale — the profile ROADMAP flagged after PR 4.
+
+:class:`EventEngine` replaces the scan with three indexes:
+
+  * ``ready`` — per-resource min-heaps of ``(priority, task, stage)`` over
+    *arrived* tasks whose current stage runs on that resource, with lazy
+    deletion: an entry is stale the moment its task moved past that stage,
+    so preemption never has to find-and-remove anything.
+  * a single global event heap holding only the *next* completion per busy
+    resource (epoch-guarded against preemption) plus the pending stage
+    arrivals — never one entry per task.
+  * virtual-time residuals — a serving task's ``remaining`` is only
+    materialized when its resource's serving head changes (preemption,
+    completion, rate change, window end).  An uncontested stage costs one
+    heap push and one pop no matter how many events fire elsewhere.
+
+Cost per event: O(log) heap work — O((events + arrivals) * log) per drain
+window instead of O(events * tasks * resources).  The engine is
+*persistent*: it keeps its indexes alive across drain windows (finite
+``t_end`` calls to :meth:`advance`), across commits (:meth:`add_tasks`
+mid-stream), and across rate changes (:meth:`set_rates` re-prices only the
+busy heads), which is how :mod:`repro.core.completions` stops rebuilding
+every ``TaskRun`` per online arrival.
+
+Semantics are the reference loop's exactly — strict priority, preempt-
+resume, work-conserving, precedence via stage order, the shared
+:func:`repro.core.schedule.time_eps` tolerance discipline — and event
+times agree with the reference up to float accumulation order (the
+reference decrements every serving residual at every global event; the
+engine decrements each residual once per head change).  Parity is gated by
+``tests/test_eventsim.py`` and ``benchmarks/drain_bench.py``.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from . import schedule
+
+# Event kinds, ordered so a completion at time t fires before a stage
+# arrival at the same t — the reference loop applies a step's completions
+# before the next serving re-decision sees new arrivals, and the order
+# matters at a knife edge: an arrival processed first would preempt a head
+# whose residual just hit zero, deferring its completion by a whole
+# service quantum.  (Coincidences *between* the engines' float
+# accumulation orders can still race; the parity gate budgets those.)
+_DONE, _ARR = 0, 1
+
+
+class EventEngine:
+    """Indexed preempt-resume simulator over :class:`~repro.core.schedule.TaskRun` records.
+
+    Mutates the task records in place exactly like the reference loop
+    (``ptr``/``remaining``/``arrived``/``done``/``completion``), so the
+    two engines are drop-in interchangeable on the same task lists.
+    """
+
+    def __init__(self, mu_node, mu_link, *, clock: float = 0.0,
+                 guard: int = 1_000_000):
+        mu_node = np.asarray(mu_node, np.float64)
+        mu_link = np.asarray(mu_link, np.float64)
+        self.V = int(mu_node.shape[0])
+        # Flat rate/backlog vectors indexed by resource id:
+        # node u -> u, link (u, v) -> V + u*V + v.
+        self._rate = np.concatenate([mu_node, mu_link.reshape(-1)])
+        self._q = np.zeros_like(self._rate)   # residual committed work
+        self.now = float(clock)
+        self.guard = int(guard)
+        self.tasks: list[schedule.TaskRun] = []
+        self._stage_res: list[list[int]] = []  # [task][stage] -> resource id
+        self._ready: dict[int, list] = {}      # res id -> heap of (prio, i, ptr)
+        self._head: dict[int, int] = {}        # busy res id -> serving task
+        self._head_since: dict[int, float] = {}
+        self._epoch: dict[int, int] = {}       # invalidates completion events
+        self._events: list = []                # (time, kind, seq, a, b)
+        self._seq = 0
+        self.live = 0                          # unfinished tasks
+        self.events_processed = 0              # real (non-stale) events
+        self.completions: list[tuple[int, float]] = []  # (task index, time)
+
+    # -- resource ids ---------------------------------------------------------
+    def _res_id(self, res: tuple) -> int:
+        if res[0] == "node":
+            return int(res[1])
+        return self.V + int(res[1]) * self.V + int(res[2])
+
+    def _res_key(self, rid: int) -> tuple:
+        if rid < self.V:
+            return ("node", rid)
+        rid -= self.V
+        return ("link", rid // self.V, rid % self.V)
+
+    # -- loading work ---------------------------------------------------------
+    def add_tasks(self, tasks: list[schedule.TaskRun]) -> None:
+        """Index new tasks (a committed batch, or the initial load).
+
+        Tasks whose current stage has already arrived (``arrived <= now``
+        up to :func:`~repro.core.schedule.time_eps`) enter the ready heaps
+        immediately and may preempt; later stage arrivals become events.
+        """
+        t = self.now
+        eps = schedule.time_eps(t)
+        touched = set()
+        for task in tasks:
+            i = len(self.tasks)
+            self.tasks.append(task)
+            self._stage_res.append([self._res_id(res)
+                                    for res, _ in task.stages])
+            if task.done:
+                continue
+            if task.ptr >= len(task.stages):   # no work at all
+                task.done = True
+                task.completion = task.arrived
+                self.completions.append((i, task.arrived))
+                continue
+            self.live += 1
+            # Residual committed work into the incremental backlog arrays.
+            sres = self._stage_res[i]
+            for k in range(task.ptr, len(task.stages)):
+                w = (task.remaining if k == task.ptr
+                     and task.remaining is not None else task.stages[k][1])
+                self._q[sres[k]] += w
+            if task.arrived > t + eps:
+                self._push_event(task.arrived, _ARR, i, task.ptr)
+            else:
+                if task.remaining is None:
+                    task.remaining = task.stages[task.ptr][1]
+                rid = sres[task.ptr]
+                heapq.heappush(self._ready.setdefault(rid, []),
+                               (task.prio, i, task.ptr))
+                touched.add(rid)
+        for rid in touched:
+            self._contest(rid, t)
+
+    # -- rates ----------------------------------------------------------------
+    def set_rates(self, mu_node, mu_link) -> None:
+        """Re-price service (straggler events between windows).
+
+        No-op when the rates are unchanged; otherwise materializes every
+        busy head at the old rates up to ``now``, then reschedules each
+        head's completion at its new rate — O(busy resources), never
+        O(tasks).
+        """
+        rate = np.concatenate([np.asarray(mu_node, np.float64),
+                               np.asarray(mu_link, np.float64).reshape(-1)])
+        if np.array_equal(rate, self._rate):
+            return
+        t = self.now
+        for rid in list(self._head):
+            self._touch(rid, t)
+        self._rate = rate
+        for rid, i in list(self._head.items()):
+            self._set_head(rid, i, t)   # epoch bump invalidates the old event
+
+    # -- index internals ------------------------------------------------------
+    def _push_event(self, time: float, kind: int, a: int, b: int) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (time, kind, self._seq, a, b))
+
+    def _peek(self, rid: int):
+        """Min-priority *valid* ready task on ``rid`` (lazy deletion)."""
+        h = self._ready.get(rid)
+        while h:
+            prio, i, ptr = h[0]
+            task = self.tasks[i]
+            if task.done or task.ptr != ptr:
+                heapq.heappop(h)      # stale: task moved on
+                continue
+            return i
+        return None
+
+    def _touch(self, rid: int, t: float) -> None:
+        """Materialize the head's virtual-time residual up to ``t``."""
+        i = self._head.get(rid)
+        if i is None:
+            return
+        dt = t - self._head_since[rid]
+        if dt > 0.0:
+            served = self._rate[rid] * dt
+            self.tasks[i].remaining -= served
+            self._q[rid] -= served
+        self._head_since[rid] = t
+
+    def _set_head(self, rid: int, i: int, t: float) -> None:
+        task = self.tasks[i]
+        rate = self._rate[rid]
+        if rate <= 0:
+            raise RuntimeError(
+                f"job with priority {task.prio} scheduled on dead "
+                f"resource {self._res_key(rid)}")
+        self._head[rid] = i
+        self._head_since[rid] = t
+        ep = self._epoch[rid] = self._epoch.get(rid, 0) + 1
+        self._push_event(t + task.remaining / rate, _DONE, rid, ep)
+
+    def _contest(self, rid: int, t: float) -> None:
+        """Re-decide the serving head after ready-heap pushes."""
+        top = self._peek(rid)
+        cur = self._head.get(rid)
+        if top is None or top == cur:
+            return
+        if cur is not None:
+            self._touch(rid, t)       # preempted: bank the served work
+        self._set_head(rid, top, t)
+
+    # -- event firing ---------------------------------------------------------
+    def _fire_arr(self, t: float, i: int, ptr: int) -> bool:
+        task = self.tasks[i]
+        if task.done or task.ptr != ptr:
+            return False
+        if task.remaining is None:
+            task.remaining = task.stages[ptr][1]
+        rid = self._stage_res[i][ptr]
+        heapq.heappush(self._ready.setdefault(rid, []), (task.prio, i, ptr))
+        self._contest(rid, t)
+        return True
+
+    def _fire_done(self, t: float, rid: int, ep: int) -> bool:
+        if self._epoch.get(rid) != ep:
+            return False              # head changed since this was scheduled
+        i = self._head.pop(rid)
+        del self._head_since[rid]
+        self._epoch[rid] = ep + 1
+        task = self.tasks[i]
+        self._q[rid] -= task.remaining   # residual since the last touch
+        task.remaining = None
+        task.ptr += 1
+        task.arrived = t
+        if task.ptr >= len(task.stages):
+            task.done = True
+            task.completion = t
+            self.live -= 1
+            self.completions.append((i, t))
+        else:
+            # Next stage arrives here and now; its heap entry is pushed
+            # before the freed resource re-decides, so a same-resource
+            # follow-on stage (consecutive layers on one node) contends.
+            task.remaining = task.stages[task.ptr][1]
+            rid2 = self._stage_res[i][task.ptr]
+            heapq.heappush(self._ready.setdefault(rid2, []),
+                           (task.prio, i, task.ptr))
+            if rid2 != rid:
+                self._contest(rid2, t)
+        top = self._peek(rid)
+        if top is not None:
+            self._set_head(rid, top, t)
+        return True
+
+    # -- driving --------------------------------------------------------------
+    def advance(self, t_end: float = np.inf) -> float:
+        """Serve until ``t_end`` (or to completion when infinite).
+
+        Fires events in time order; with a finite window, busy heads are
+        materialized at ``t_end`` so residuals (and the backlog arrays)
+        reflect the partial slice — exactly the reference loop's clipped
+        final step.  Returns the reference loop's stop time: ``t_end`` if
+        work remains beyond it, else the instant the last event fired.
+        """
+        t_end = float(t_end)
+        steps = 0
+        last = self.now
+        while self.live > 0 and self._events:
+            time = self._events[0][0]
+            if time > t_end:
+                break
+            _, kind, _, a, b = heapq.heappop(self._events)
+            fired = (self._fire_arr(time, a, b) if kind == _ARR
+                     else self._fire_done(time, a, b))
+            if fired:
+                last = max(last, float(time))
+                self.now = max(self.now, float(time))
+                steps += 1
+                self.events_processed += 1
+                if steps > self.guard:
+                    raise RuntimeError("simulator did not converge")
+        if np.isfinite(t_end):
+            for rid in list(self._head):
+                self._touch(rid, t_end)
+            self.now = t_end
+            return t_end if self.live > 0 else last
+        if self.live > 0:
+            raise RuntimeError(
+                "event engine stalled with live tasks and no events — "
+                "index invariant broken")
+        return self.now
+
+    def materialize(self) -> None:
+        """Bank every busy head's virtual-time residual up to ``now``."""
+        for rid in list(self._head):
+            self._touch(rid, self.now)
+
+    def queue_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """Residual committed work per resource, materialized to ``now``.
+
+        float64 ``(q_node [V], q_link [V, V])`` maintained incrementally —
+        O(V^2) copy, never a rescan of live jobs.  Clamped at zero (float
+        drift from incremental subtraction is ~1 ulp per event).
+        """
+        self.materialize()
+        qn = np.maximum(self._q[:self.V], 0.0)
+        ql = np.maximum(self._q[self.V:], 0.0).reshape(self.V, self.V)
+        return qn, ql
+
+
+def run_event_loop_indexed(tasks: list[schedule.TaskRun], mu_node, mu_link,
+                           *, t: float = 0.0, t_end: float = np.inf,
+                           guard: int = 1_000_000) -> float:
+    """Drop-in replacement for :func:`repro.core.schedule.run_event_loop_ref`.
+
+    Builds a fresh engine over ``tasks`` and advances it — same mutation
+    contract, same return value.  For the persistent (cross-window) use
+    hold an :class:`EventEngine` instead.
+    """
+    eng = EventEngine(mu_node, mu_link, clock=t, guard=guard)
+    eng.add_tasks(tasks)
+    return eng.advance(t_end)

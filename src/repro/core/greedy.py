@@ -48,15 +48,40 @@ def _round(net: ComputeNetwork, batch: JobBatch, routed: jax.Array,
     return j, r.cost[j], r.assign[j], net2
 
 
+def _job_paths(pre_net: ComputeNetwork, batch: JobBatch, j: int, assign_row,
+               closures):
+    """Explicit transfer hops for job ``j`` against the pre-commit state.
+
+    Reuses the round's already-built closure stack, so a solve that wants
+    paths pays one extraction pass per round — not the full
+    ``replay_solution`` (closure rebuild + bound re-eval + re-commit) the
+    serving scheduler otherwise runs per arrival to fill ``plan.paths``.
+    The hops are chosen against the queue state seen at the job's priority
+    level, exactly the Alg. 1 / Alg. 2 semantics ``replay_solution``
+    implements — the parity test asserts equality.
+    """
+    cl = None if closures is None else closures.job(j)
+    return routing.extract_paths(
+        pre_net, batch.comp[j], batch.data[j], batch.src[j], batch.dst[j],
+        batch.num_layers[j], assign_row, closures=cl)
+
+
 def greedy_route(net: ComputeNetwork, batch: JobBatch,
                  *, use_pallas: bool | None = None,
-                 lazy: bool = False, share_closures: bool = True) -> Plan:
+                 lazy: bool = False, share_closures: bool = True,
+                 extract_paths: bool = False) -> Plan:
     """Run Algorithm 1 to completion.
 
     ``share_closures=True`` (default) builds one batched closure stack per
     round and shares it between routing and commit; ``False`` reproduces the
     seed behavior (every routing/commit call rebuilds its own closures) —
     kept for benchmarking the reuse win, not for production use.
+
+    ``extract_paths=True`` additionally fills ``plan.paths`` (explicit
+    per-layer transfer hops) during the solve, one extraction per round
+    against the round's closures.  Callers that need paths anyway (the
+    exact-drain ledger, the event simulator) skip a full
+    ``replay_solution`` this way; bounds are untouched.
 
     ``lazy=True`` is the beyond-paper *lazy greedy* (EXPERIMENTS.md §Perf):
     queues only grow, so every job's completion bound is monotone
@@ -68,27 +93,32 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
     """
     if lazy:
         return _greedy_lazy(net, batch, use_pallas=use_pallas,
-                            share_closures=share_closures)
+                            share_closures=share_closures,
+                            extract_paths=extract_paths)
     J, lmax = batch.num_jobs, batch.max_layers
     routed = jnp.zeros((J,), bool)
     order = np.zeros((J,), np.int32)
     assign = np.zeros((J, lmax), np.int32)
     bounds = np.zeros((J,), np.float64)
+    paths: dict[int, list] | None = {} if extract_paths else None
     cur = net
     dedupe = SP.dedupe_data(batch) if share_closures else None
     for p in range(J):
         closures = (SP.build_closures_batch(cur, batch, dedupe=dedupe,
                                             use_pallas=use_pallas)
                     if share_closures else None)
-        j, cost, a, cur = _round(cur, batch, routed, closures,
+        j, cost, a, nxt = _round(cur, batch, routed, closures,
                                  use_pallas=use_pallas)
         j = int(j)
         order[p] = j
         bounds[j] = float(cost)
         assign[j] = np.asarray(a)
+        if paths is not None:
+            paths[j] = _job_paths(cur, batch, j, assign[j], closures)
+        cur = nxt
         routed = routed.at[j].set(True)
     return Plan.from_order(assign, order, bounds, solver="greedy",
-                           meta={"n_routings": J * J}, net=cur)
+                           meta={"n_routings": J * J}, net=cur, paths=paths)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -110,7 +140,8 @@ def _commit_one(net, batch, j, assign, closures=None, *, use_pallas=None):
 
 def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
                  *, use_pallas: bool | None = None,
-                 share_closures: bool = True) -> Plan:
+                 share_closures: bool = True,
+                 extract_paths: bool = False) -> Plan:
     J, lmax = batch.num_jobs, batch.max_layers
     dedupe = SP.dedupe_data(batch) if share_closures else None
 
@@ -120,6 +151,7 @@ def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
                 if share_closures else None)
 
     closures = fresh_closures(net)
+    paths: dict[int, list] | None = {} if extract_paths else None
     r0 = routing.route_batch(net, batch, closures=closures,
                              use_pallas=use_pallas)
     # Cached lower bounds stay on device; selection is a device argmin over
@@ -149,6 +181,8 @@ def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
         order[p] = j
         bounds[j] = float(cost[j])
         assign[j] = assign_c[j]
+        if paths is not None:
+            paths[j] = _job_paths(cur, batch, j, assign_c[j], closures)
         active = active.at[j].set(False)
         cur = _commit_one(cur, batch, j, assign_c[j], closures,
                           use_pallas=use_pallas)
@@ -157,4 +191,5 @@ def _greedy_lazy(net: ComputeNetwork, batch: JobBatch,
             fresh[:] = False
             fresh[j] = True  # routed jobs are never probed again
     return Plan.from_order(assign, order, bounds, solver="lazy",
-                           meta={"n_routings": n_routings}, net=cur)
+                           meta={"n_routings": n_routings}, net=cur,
+                           paths=paths)

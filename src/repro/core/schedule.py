@@ -21,6 +21,26 @@ from ``t`` to ``t_end`` under preempt-resume priority service.  One-shot
 ledger (:mod:`repro.core.completions`) runs it *incrementally* — a ``dt``
 window at a time between online arrivals — which is what makes the exact
 queue drain a first-class alternative to the fluid model.
+
+Two interchangeable engines implement the loop's semantics:
+
+  * ``engine="ref"`` — :func:`run_event_loop_ref`, the seed's linear-scan
+    loop: every event rescans every task to rebuild the per-resource
+    serving heads (O(events x tasks)).  It is the semantic reference the
+    indexed engine is gated against, and stays the default for the
+    one-shot :func:`simulate` so its results are unchanged bit-for-bit.
+  * ``engine="indexed"`` — :mod:`repro.core.eventsim`, a priority-indexed
+    event engine (per-resource heaps, a global event heap, virtual-time
+    residuals) that costs O(log) per event and persists across drain
+    windows.  The serving hot path (:mod:`repro.core.completions`) runs on
+    it; ``benchmarks/drain_bench.py`` measures the speedup and gates
+    parity.
+
+Event-time comparisons share one tolerance discipline: :func:`time_eps`
+(relative to the clock — an absolute epsilon like ``t + 1e-18`` silently
+degrades to exact comparison once ``t`` exceeds ~1e-2 in float64) and
+:func:`work_eps` (relative to a stage's work) are used by both engines and
+by :func:`repro.core.completions.exact_backlog_trace`.
 """
 from __future__ import annotations
 
@@ -128,15 +148,32 @@ class TaskRun:
     completion: float = 0.0    # valid once done
 
 
+def time_eps(t: float) -> float:
+    """Tolerance for event-time comparisons at clock ``t``.
+
+    Relative to the clock magnitude: an absolute epsilon (the seed used
+    ``t + 1e-18``) is below one ulp of ``t`` whenever ``t`` exceeds ~1e-2,
+    so the arrival guard silently degraded to exact comparison at any
+    nonzero clock.  Shared by both event-loop engines and the ledger's
+    backlog trace so window boundaries and arrival cutoffs agree.
+    """
+    return 1e-12 * max(1.0, abs(t))
+
+
+def work_eps(work: float) -> float:
+    """Completion threshold for a stage of ``work`` units (relative)."""
+    return 1e-12 * max(1.0, work)
+
+
 def _resource_rate(res: tuple, mu_node: np.ndarray,
                    mu_link: np.ndarray) -> float:
     return float(mu_node[res[1]] if res[0] == "node"
                  else mu_link[res[1], res[2]])
 
 
-def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
-                   mu_link: np.ndarray, *, t: float = 0.0,
-                   t_end: float = np.inf, guard: int = 1_000_000) -> float:
+def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
+                       mu_link: np.ndarray, *, t: float = 0.0,
+                       t_end: float = np.inf, guard: int = 1_000_000) -> float:
     """Preempt-resume priority service of ``tasks`` over ``[t, t_end]``.
 
     Every resource serves the highest-priority arrived task (strict
@@ -146,7 +183,16 @@ def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
     ``t_end=inf`` this is exactly the one-shot simulator's loop; a finite
     ``t_end`` is the incremental drain window used by the committed-work
     ledger.
+
+    This is the seed's linear-scan loop (the semantic reference for
+    :mod:`repro.core.eventsim`): each event rescans every task.  Service
+    rates are hoisted into per-stage arrays up front — the rate of a
+    (task, stage) pair never changes within a run, so the scan does one
+    list index instead of two dict lookups per serving resource per event.
     """
+    # Hoisted per-stage service rates, indexed [task][stage].
+    stage_rates = [[_resource_rate(res, mu_node, mu_link)
+                    for res, _ in task.stages] for task in tasks]
     for task in tasks:
         if not task.done and task.ptr >= len(task.stages):
             task.done = True
@@ -157,16 +203,17 @@ def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
         if steps > guard:
             raise RuntimeError("simulator did not converge")
         # Highest-priority arrived task per resource.
-        serving: dict[tuple, TaskRun] = {}
-        for task in tasks:
-            if task.done or task.arrived > t + 1e-18:
+        serving: dict[tuple, tuple[TaskRun, float]] = {}
+        eps = time_eps(t)
+        for task, rates in zip(tasks, stage_rates):
+            if task.done or task.arrived > t + eps:
                 continue
             res, work = task.stages[task.ptr]
             if task.remaining is None:
                 task.remaining = work
             cur = serving.get(res)
-            if cur is None or task.prio < cur.prio:
-                serving[res] = task
+            if cur is None or task.prio < cur[0].prio:
+                serving[res] = (task, rates[task.ptr])
         if not serving:
             # advance to the next stage-arrival (nothing serveable now)
             nxt = min(task.arrived for task in tasks if not task.done)
@@ -176,25 +223,23 @@ def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
             continue
         # Next completion event.
         dt = np.inf
-        for res, task in serving.items():
-            rate = _resource_rate(res, mu_node, mu_link)
+        for res, (task, rate) in serving.items():
             if rate <= 0:
                 raise RuntimeError(
                     f"job with priority {task.prio} scheduled on dead "
                     f"resource {res}")
             dt = min(dt, task.remaining / rate)
         nxt_arr = min((task.arrived for task in tasks
-                       if not task.done and task.arrived > t + 1e-18),
+                       if not task.done and task.arrived > t + eps),
                       default=np.inf)
         dt = min(dt, nxt_arr - t)
         clipped = t + dt >= t_end
         if clipped:
             dt = t_end - t  # serve the final partial slice, then stop
         t += dt
-        for res, task in serving.items():
-            rate = _resource_rate(res, mu_node, mu_link)
+        for res, (task, rate) in serving.items():
             task.remaining -= rate * dt
-            if task.remaining <= 1e-12 * max(1.0, task.stages[task.ptr][1]):
+            if task.remaining <= work_eps(task.stages[task.ptr][1]):
                 task.remaining = None
                 task.ptr += 1
                 task.arrived = t
@@ -206,12 +251,38 @@ def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
     return t
 
 
+def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
+                   mu_link: np.ndarray, *, t: float = 0.0,
+                   t_end: float = np.inf, guard: int = 1_000_000,
+                   engine: str = "ref") -> float:
+    """Run the preempt-resume loop with the chosen engine.
+
+    ``engine="ref"`` (default) is the seed linear-scan loop;
+    ``engine="indexed"`` routes through the O(log)-per-event engine of
+    :mod:`repro.core.eventsim` — same semantics, same tolerance
+    discipline, event times equal up to float accumulation order (gated by
+    the parity tests and ``benchmarks/drain_bench.py``).
+    """
+    if engine == "indexed":
+        from . import eventsim
+        return eventsim.run_event_loop_indexed(
+            tasks, mu_node, mu_link, t=t, t_end=t_end, guard=guard)
+    if engine != "ref":
+        raise ValueError(f"engine must be 'ref' or 'indexed', got {engine!r}")
+    return run_event_loop_ref(tasks, mu_node, mu_link, t=t, t_end=t_end,
+                              guard=guard)
+
+
 def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,
-             paths: dict[int, list[list[tuple[int, int]]]] | None = None) -> SimResult:
+             paths: dict[int, list[list[tuple[int, int]]]] | None = None,
+             engine: str = "ref") -> SimResult:
     """Event-driven simulation of the routed jobs in the actual system.
 
     ``assign`` may be a :class:`~repro.core.plan.Plan` (then ``order`` must
-    be omitted and the plan's stored paths, if any, are used).
+    be omitted and the plan's stored paths, if any, are used).  ``engine``
+    picks the event-loop implementation; the default ``"ref"`` keeps
+    one-shot results bit-identical to the seed loop (``"indexed"`` agrees
+    up to float accumulation order — see ``benchmarks/drain_bench.py``).
     """
     from .plan import Plan
     if isinstance(assign, Plan) and paths is None:
@@ -226,6 +297,6 @@ def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,
     prio_of = {int(order[p]): p for p in range(len(order))}
     stages = job_stages(batch, assign, paths)
     tasks = [TaskRun(stages=stages[j], prio=prio_of[j]) for j in range(J)]
-    run_event_loop(tasks, mu_node, mu_link)
+    run_event_loop(tasks, mu_node, mu_link, engine=engine)
     completion = np.array([task.completion for task in tasks], np.float64)
     return SimResult(completion=completion, makespan=float(np.max(completion)))

@@ -249,7 +249,8 @@ class OnlineScheduler(RoutedScheduler):
         if self.ledger is None:
             raise ValueError("finish() requires drain='exact'")
         comps, self.ledger = C.run_to_completion(
-            self._effective_topology(), self.ledger)
+            self._effective_topology(), self.ledger,
+            engine=self.sim_engine)
         self._sync_ledger_queues()
         if comps:
             self._now = max(self._now, max(comps.values()))
@@ -261,16 +262,17 @@ class OnlineScheduler(RoutedScheduler):
         """Full-horizon event replay of every committed plan.
 
         Requires ``track_commits=True``.  Replays the never-drained commit
-        log through the event simulator at current effective health (one
-        topology for the whole horizon — piecewise health histories are
-        approximated by their final segment) and records the results in
-        ``trace.replay_completions``.
+        log through the event simulator *piecewise*: every
+        ``report_slowdown`` was recorded in the log's health history, and
+        each segment replays at the effective topology actually in force
+        during it (a log with no health events replays at base health in
+        one segment).  Results land in ``trace.replay_completions``.
         """
         if self.commit_log is None:
             raise ValueError("replay_ground_truth() requires "
                              "track_commits=True")
-        comps, _ = C.run_to_completion(self._effective_topology(),
-                                       self.commit_log)
+        comps, _ = C.replay_piecewise(self.topology, self.commit_log,
+                                      engine=self.sim_engine)
         self.trace.replay_completions.update(comps)
         self.trace.commit_log = self.commit_log
         return comps

@@ -133,7 +133,8 @@ class RoutedScheduler:
 
     def __init__(self, net: N.ComputeNetwork | Topology, *,
                  method: str = "greedy", drain: str = "fluid",
-                 track_commits: bool = False, **solver_opts):
+                 track_commits: bool = False, sim_engine: str = "indexed",
+                 **solver_opts):
         if isinstance(net, Topology):
             self.topology = net
             self.state = net.empty_state()
@@ -143,7 +144,14 @@ class RoutedScheduler:
         if drain not in ("fluid", "exact"):
             raise ValueError(
                 f"drain must be 'fluid' or 'exact', got {drain!r}")
+        if sim_engine not in ("indexed", "ref"):
+            raise ValueError(
+                f"sim_engine must be 'indexed' or 'ref', got {sim_engine!r}")
         self.method = method
+        # Exact-drain event engine: "indexed" (persistent O(log)-per-event
+        # index threaded through drains/commits/replans) or "ref" (the seed
+        # linear-scan loop — benchmarks/drain_bench.py races the two).
+        self.sim_engine = sim_engine
         self.solver_opts = solver_opts
         # Authoritative clock, host-side float64: ``state.clock`` (f32, so it
         # loses sub-second ticks past ~2^24 s if accumulated) is only ever
@@ -193,16 +201,22 @@ class RoutedScheduler:
         node's effective capacity becomes mu_u / factor (it serves *and
         drains* slower), ``factor=1`` restores full health.  Raises
         ``ValueError`` for factor <= 0 or non-finite factors, and for a
-        node outside the topology.
+        node outside the topology.  When a commit log is kept the event is
+        recorded there too, so ``replay_piecewise`` can reconstruct the
+        true segment-by-segment health history.
         """
         self._slowdown[node] = self._check_slowdown(node, factor)
+        if self.commit_log is not None:
+            self.commit_log = self.commit_log.record_slowdown(
+                self._now, node, self._slowdown[node])
 
     def _drain_state(self, dt: float) -> None:
         """Advance backlogs ``dt`` seconds at effective (health-aware) rates
         under the configured drain model.  Does not move the clock."""
         if self.drain_mode == "exact":
             self.ledger = C.drain_exact(self._effective_topology(),
-                                        self.ledger, dt)
+                                        self.ledger, dt,
+                                        engine=self.sim_engine)
             self._sync_ledger_queues()
         else:
             self.state = self.state.advance(self._effective_topology(), dt)
@@ -276,12 +290,23 @@ class RoutedScheduler:
         assert [p.priority for p in out] == list(range(len(out)))
         return out
 
+    # Solvers that can fill plan.paths during the solve, reusing each
+    # round's closures (greedy.greedy_route(extract_paths=True)).  For any
+    # other method _ledger_commit falls back to a full replay_solution.
+    _PATH_SOLVERS = ("greedy", "lazy")
+
     def _solve_and_commit(self, batch: J.JobBatch,
                           names: list[str] | None = None) -> Plan:
         topo = self._effective_topology()
         pre_state = self.state
+        opts = self.solver_opts
+        if ((self.ledger is not None or self.commit_log is not None)
+                and self.method in self._PATH_SOLVERS):
+            # The ledger charges bytes to explicit hops: have the solver
+            # extract them per round instead of re-replaying per arrival.
+            opts = {"extract_paths": True, **opts}
         plan = solvers.solve(topo, batch, method=self.method,
-                             state=self.state, **self.solver_opts)
+                             state=self.state, **opts)
         if plan.net is None:  # e.g. the exact solver reports no queue state
             plan = dataclasses.replace(
                 plan, net=plan.commit(topo.view(self.state), batch))
@@ -311,6 +336,10 @@ class RoutedScheduler:
         if self.ledger is not None:
             self.ledger = self.ledger.commit(batch, plan, names=names,
                                              at=self._now)
+            if self.sim_engine == "indexed":
+                # First commit births the persistent index; later commits
+                # extend it in place inside CommittedWork.commit.
+                self.ledger = C.warm_engine(topo, self.ledger)
             # Ledger is the source of truth in exact mode: rounding of the
             # committed queues must match what later drains will report.
             self._sync_ledger_queues()
@@ -360,7 +389,11 @@ class RoutedScheduler:
         if self.drain_mode == "exact":
             ledger = pre_ledger
             if elapsed > 0 and self.drain_queues:
-                ledger = C.drain_exact(pre_topo, ledger, elapsed)
+                # The snapshot's engine slot went stale the moment the live
+                # chain drained past it, so this rollback drain rebuilds the
+                # index lazily from the snapshot's immutable job records.
+                ledger = C.drain_exact(pre_topo, ledger, elapsed,
+                                       engine=self.sim_engine)
             self.ledger = ledger
             self.state = pre_state
             self._sync_ledger_queues()
@@ -369,7 +402,11 @@ class RoutedScheduler:
                 pre_state = pre_state.advance(pre_topo, elapsed)
             self.state = pre_state
         # The superseded batch never ran to completion: drop it from the
-        # ground-truth record too (same approximation as the state rollback).
+        # ground-truth record too (same approximation as the state rollback)
+        # — but keep the full health history, which rollback cannot undo.
+        if pre_log is not None and self.commit_log is not None:
+            pre_log = dataclasses.replace(pre_log,
+                                          health=self.commit_log.health)
         self.commit_log = pre_log
         self._stamp_clock()
         plan = self._solve_and_commit(batch,
