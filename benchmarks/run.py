@@ -34,7 +34,8 @@ def main() -> None:
         results.append((name, dt * 1e6, derive(rows)))
 
     from . import bound_gap, drain_bench, fig5_small, fig_large, \
-        kernel_bench, online_bench, roofline, runtime_scaling, solver_compare
+        kernel_bench, online_bench, roofline, runtime_scaling, \
+        solver_compare, stream_bench
 
     def _solver_ratio(rows):
         by = {r["method"]: r for r in rows}
@@ -53,6 +54,11 @@ def main() -> None:
                      f"exact_holds={r['all_exact_bounds_hold']},"
                      f"gap={r['rows'][0]['backlog_gap_mean_s']:.4f}s")
           if r and r.get("rows") else "n/a")
+    bench("stream", lambda: stream_bench.run(smoke=True, verbose=False),
+          lambda r: (f"match={r['all_pipeline_match_serial']},"
+                     f"bounded={r['all_bounded']},"
+                     f"best={max((x['best_at_equal_p99']['speedup'] for x in r['rows'] if x['best_at_equal_p99']), default=float('nan')):.2f}x")
+          if r else "n/a")
     bench("drain", lambda: drain_bench.run(smoke=True),
           lambda r: (f"match={r['all_indexed_match_ref']},"
                      f"loop={r['headline']['loop_speedup']:.2f}x,"

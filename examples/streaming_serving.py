@@ -1,0 +1,106 @@
+"""Streaming serving: batching window + decoupled solver vs the serial loop.
+
+    PYTHONPATH=src python examples/streaming_serving.py
+
+1. The same bursty arrival stream (bursts of ~4 requests) is driven through
+   the serving stack twice: once by the serial per-arrival discipline
+   (``window_s=0, max_batch=1`` — one solve per request, the
+   ``run_online`` loop), once through a batching window (collect up to
+   B=4 jobs or δ sim-seconds, then one padded batched solve).  Identical
+   arrivals, identical jobs, identical drain.
+2. The pipeline runs on a simulated clock with the solver as a stage on
+   it (``solver_latency="measured"`` charges observed solve walls), so
+   every request's latency decomposes into **wait** (window residence +
+   solver queue + modeled solve) + **service** (the committed plan's
+   bound) — time spent waiting for a batch is accounted, not hidden.
+3. Backpressure: with a bounded pending buffer (``max_pending``) an
+   overload burst is either **deferred** (held FIFO, re-admitted as
+   commits free the buffer, the extra wait charged to latency) or
+   **shed** (dropped and accounted) — the buffer bound holds either way.
+
+``benchmarks/stream_bench.py`` measures the wall-clock throughput side:
+one scheduler entry per window amortizes the per-arrival dispatch overhead
+(drain sync, queue materialization, trace bookkeeping), sustaining higher
+arrivals/sec at equal p99.  The solve inside a window is selectable —
+``solve_mode="batched"`` (one padded solve) or ``"sequential"`` (width-1
+solves in window order, committing exactly the serial loop's plans; wins
+when the solver is compute-bound).
+"""
+import sys
+import pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.scenarios import make_scenario
+from repro.serving.stream import StreamConfig, StreamingPipeline, run_stream
+
+
+def main():
+    sc0 = make_scenario("star", seed=0)
+    rate = sc0.nominal_rate(0.6)
+    print(f"scenario {sc0.name}: {sc0.num_nodes} nodes, "
+          f"bursty arrivals at {rate:.3g}/s (60% offered load)\n")
+
+    # -- serial vs windowed on the identical stream -------------------------
+    runs = {}
+    for label, cfg in [("serial (δ=0, B=1)", dict(window_s=0.0, max_batch=1)),
+                       ("windowed (δ=0.05/λ, B=4)",
+                        dict(window_s=0.05 / rate, max_batch=4))]:
+        # fresh scenario per run => identical rng stream => identical jobs
+        runs[label] = run_stream(make_scenario("star", seed=0),
+                                 horizon=40 / rate, seed=9,
+                                 process="bursty", rate=rate,
+                                 solver_latency="measured", **cfg)
+
+    print(f"{'':26s} {'requests':>8s} {'windows':>8s} {'solves':>7s} "
+          f"{'p50 wait':>9s} {'p99 lat':>9s}")
+    for label, tr in runs.items():
+        s = tr.summary()
+        print(f"{label:26s} {s['requests']:8d} {s['windows']:8d} "
+              f"{s['windows']:7d} {s['p50_wait_s']:8.3f}s "
+              f"{s['p99_latency_s']:8.3f}s")
+    serial, windowed = runs.values()
+    print(f"\nthe window turns {len(serial.windows)} solver calls into "
+          f"{len(windowed.windows)} batched ones; the p99 cost of waiting "
+          f"for the batch is "
+          f"{windowed.summary()['p99_latency_s'] / serial.summary()['p99_latency_s'] - 1:+.1%} "
+          f"(bursts arrive ~together, so a tiny δ captures whole bursts)")
+
+    # per-request decomposition: latency == wait + service, request by request
+    r = max(windowed.requests, key=lambda r: r.wait_s)
+    print(f"slowest-waiting request {r.name!r}: arrived {r.arrival_s:.3f}s, "
+          f"window closed {r.close_s:.3f}s, committed {r.commit_s:.3f}s\n"
+          f"  latency {r.latency_s:.3f}s = wait {r.wait_s:.3f}s "
+          f"(window {r.close_s - r.arrival_s:.3f}s + solver queue "
+          f"{r.queue_s:.3f}s + solve {r.solve_s:.3f}s) "
+          f"+ service {r.service_s:.3f}s")
+
+    # -- backpressure: defer vs shed on an overload burst -------------------
+    print("\n20-request burst into a pending buffer of 4, slow solver "
+          "(0.3s/solve):")
+    jobs = sc0.sample_jobs(np.random.default_rng(1), 20)
+    for policy in ("defer", "shed"):
+        pipe = StreamingPipeline(
+            sc0.topology,
+            StreamConfig(window_s=0.0, max_batch=4, solver_latency=0.3,
+                         max_pending=4, policy=policy))
+        tr = pipe.run(iter([(0.01 * i, [j]) for i, j in enumerate(jobs)]),
+                      horizon=30.0, pad_to=sc0.max_layers)
+        s = tr.summary()
+        print(f"  policy={policy:5s}: committed {s['requests']:2d}  "
+              f"deferred {s['deferred']:2d}  shed {s['shed']:2d}  "
+              f"p99 wait {s['p99_wait_s']:.2f}s")
+        if policy == "defer":
+            # FIFO preserved: deferral never reorders same-priority arrivals
+            assert [r.name for r in tr.requests] == [j.name for j in jobs]
+            assert s["requests"] == 20 and s["shed"] == 0
+        else:
+            assert s["requests"] + s["shed"] == 20 and s["deferred"] == 0
+    print("defer keeps every request (wait charged to latency); "
+          "shed trades completeness for bounded wait")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

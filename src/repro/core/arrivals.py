@@ -18,11 +18,15 @@ generator of sorted timestamps in ``[0, horizon)`` seconds:
 
 ``make_process(name, **params)`` returns a ``(rng, horizon) -> times``
 callable from a string name, so scenarios and benchmarks can pick a
-process the same way they pick a solver.
+process the same way they pick a solver.  :func:`stream_times` is the
+*iterator view* over the same processes — the shape the streaming serving
+pipeline (:mod:`repro.serving.stream`) consumes arrivals in, one at a
+time, with an optional chunked mode so very long horizons never
+materialize a full timestamp array.
 """
 from __future__ import annotations
 
-from typing import Callable, Protocol
+from typing import Callable, Iterator, Protocol
 
 import numpy as np
 
@@ -130,3 +134,62 @@ def make_process(name: str, **params) -> ArrivalFn:
             f"unknown arrival process {name!r}; available: "
             f"{', '.join(available())}") from None
     return factory(**params)
+
+
+def resolve_rate(process: str, rate: float | None,
+                 params: dict | None) -> dict:
+    """Map the ``rate`` shorthand onto a named process's own parameters.
+
+    Explicit ``params`` always win over the shorthand.  The mapping is only
+    defined for the built-ins — ``poisson`` / ``bursty`` take ``rate``
+    directly, ``diurnal`` scales the whole profile (``peak_rate = rate``,
+    ``base_rate = peak_rate / 5``, the module defaults' 5:1 ratio) — so any
+    other *registered* process rejects ``rate`` with a ``ValueError``
+    rather than silently ignoring it.  (An unregistered name passes
+    through: :func:`make_process` raises its own "unknown process" error.)
+    Shared by the serial online loop and the streaming pipeline so both
+    drive bit-identical arrival streams from the same arguments.
+    """
+    out = dict(params or {})
+    if rate is None:
+        return out
+    if process in ("poisson", "bursty"):
+        out.setdefault("rate", rate)
+    elif process == "diurnal":
+        out.setdefault("peak_rate", rate)
+        out.setdefault("base_rate", out["peak_rate"] / 5.0)
+    elif process in available():
+        raise ValueError(
+            f"run_online(rate=...) has no defined mapping onto process "
+            f"{process!r}; pass its rate parameters via process_params=")
+    return out
+
+
+def stream_times(process: str, rng: np.random.Generator, horizon: float,
+                 *, chunk_s: float | None = None,
+                 **params) -> Iterator[float]:
+    """Iterator view over an arrival process.
+
+    Materializing a whole horizon of timestamps up front is fine for a
+    benchmark but the wrong shape for a serving pipeline that ingests
+    arrivals one at a time; this yields them lazily.  By default the named
+    process is drawn once (the stream is *identical* to
+    ``make_process(process, **params)(rng, horizon)``); with ``chunk_s``
+    the horizon is generated chunk-by-chunk — the process restarts at each
+    chunk boundary, which is exact for the memoryless ``poisson`` and an
+    approximation for processes with cross-boundary structure (a burst or
+    diurnal phase does not span chunks) — so unbounded horizons never hold
+    more than one chunk of timestamps in memory.
+    """
+    fn = make_process(process, **params)
+    if chunk_s is None:
+        yield from (float(t) for t in fn(rng, horizon))
+        return
+    if chunk_s <= 0:
+        raise ValueError(f"chunk_s must be > 0, got {chunk_s}")
+    t0 = 0.0
+    while t0 < horizon:
+        dt = min(chunk_s, horizon - t0)
+        for t in fn(rng, dt):
+            yield t0 + float(t)
+        t0 += dt

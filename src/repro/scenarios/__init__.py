@@ -88,6 +88,18 @@ class Scenario:
         object.__setattr__(self, "_name_seq", seq + n)  # frozen dataclass
         return out
 
+    def job_stream(self, rng: np.random.Generator, times,
+                   batch_size: int = 1):
+        """Lazy ``(t, jobs)`` arrival epochs for the streaming pipeline.
+
+        Jobs are sampled *at pull time*, in arrival order — the pipeline
+        consumes epochs strictly time-ordered, so the rng stream (and
+        hence every job and job name) is identical to the serial
+        ``run_online`` loop over the same ``times``.
+        """
+        for t in times:
+            yield float(t), self.sample_jobs(rng, batch_size)
+
     @functools.cached_property
     def mean_service_s(self) -> float:
         """Mean empty-network optimal completion time of a request (s).

@@ -33,7 +33,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import arrivals as A, completions as C, jobs as J
+from repro.core import arrivals as A, completions as C, jobs as J, schedule
 from repro.core.state import Topology, backlog_seconds
 from .scheduler import Placement, Request, RoutedScheduler, requests_to_jobs
 
@@ -135,11 +135,19 @@ class OnlineTrace:
         return out
 
     def to_dict(self) -> dict:
+        # ``names``/``completions``/``replay_completions`` carry the exact
+        # drain's results (PR 4/5): without them a serialized trace loses
+        # every actual (ground-truth) completion time and the
+        # actual-latency percentiles the summary derives from them.
         return {
             **self.summary(),
             "times": self.times.tolist(),
+            "names": [list(r.names) for r in self.records],
             "backlogs": self.backlogs.tolist(),
             "latencies": self.latencies.tolist(),
+            "actual_latencies": self.actual_latencies().tolist(),
+            "completions": dict(self.completions),
+            "replay_completions": dict(self.replay_completions),
             "events": self.events,
         }
 
@@ -172,7 +180,12 @@ class OnlineScheduler(RoutedScheduler):
         The clock always advances — time passing and queue draining are
         independent; ``drain_queues=False`` freezes only the backlogs.
         """
-        if t < self.now - 1e-9:
+        # Relative tolerance (schedule.time_eps): an absolute 1e-9 slack is
+        # below one ulp of the clock once it passes ~2^20 s, so the guard
+        # would start rejecting legitimate same-instant events at large
+        # clocks (PR 5 converted the other absolute guards; this one was
+        # missed).
+        if t < self.now - schedule.time_eps(self.now):
             raise ValueError(f"time went backwards: {t} < {self.now}")
         dt = max(t - self.now, 0.0)
         if dt > 0 and self.drain_queues:
@@ -185,18 +198,68 @@ class OnlineScheduler(RoutedScheduler):
     def submit_jobs(self, t: float, infer_jobs: Sequence[J.InferenceJob],
                     *, pad_to: int | None = None) -> list[Placement]:
         """Arrival event: drain to ``t``, place the batch, record the epoch."""
+        return self.submit_window(t, infer_jobs, pad_to=pad_to)
+
+    def submit_window(self, t: float, infer_jobs: Sequence[J.InferenceJob],
+                      *, arrivals: Sequence[float] | None = None,
+                      pad_to: int | None = None,
+                      solve_mode: str = "batched") -> list[Placement]:
+        """Window-batched submission (the streaming pipeline's hook).
+
+        ``t`` is the *commit* instant: the state drains to it and the whole
+        window is placed there in one scheduler entry (one drain sync, one
+        backlog accounting pass, one trace record).  ``solve_mode`` picks
+        the solver shape inside that entry: ``"batched"`` runs one padded
+        batched solve over the window (``batch_jobs(pad_to=)`` operand —
+        the accelerator-friendly shape); ``"sequential"`` runs one width-1
+        solve per request in window order against the evolving queue state
+        — exactly the plans the serial loop would commit for coincident
+        arrivals, with none of the padded batch's extra per-round
+        evaluation work.  ``arrivals`` gives each request's own arrival
+        instant (aligned with ``infer_jobs``); the recorded per-request
+        latency is then queueing wait plus the solver's completion bound,
+        ``(t - arrival_i) + bound_i`` — the quantity a batching window
+        actually delivers.  With ``arrivals`` omitted every request
+        arrived at ``t`` and this is exactly :meth:`submit_jobs`; names
+        within a window must be unique (they key the wait accounting and
+        the exact-drain completions).  After either mode ``last_solve_s``
+        holds the window's total solve wall.
+        """
+        if solve_mode not in ("batched", "sequential"):
+            raise ValueError(f"solve_mode must be 'batched' or "
+                             f"'sequential', got {solve_mode!r}")
+        wait = None
+        if arrivals is not None:
+            if len(arrivals) != len(infer_jobs):
+                raise ValueError(
+                    f"arrivals ({len(arrivals)}) must align with infer_jobs "
+                    f"({len(infer_jobs)})")
+            names = [j.name for j in infer_jobs]
+            if len(set(names)) != len(names):
+                raise ValueError("window job names must be unique")
+            wait = {j.name: float(t) - float(a)
+                    for j, a in zip(infer_jobs, arrivals)}
         self.advance_to(t)
         eff = self._effective_topology()
         before = backlog_seconds(eff, self.state)
-        placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to)
+        if solve_mode == "sequential" and len(infer_jobs) > 1:
+            placements, walls = [], 0.0
+            for job in infer_jobs:
+                placements.extend(self.schedule_jobs([job], pad_to=pad_to))
+                walls += self.last_solve_s
+            self.last_solve_s = walls
+        else:
+            placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to)
         after = backlog_seconds(eff, self.state)
         self.trace.records.append(ArrivalRecord(
             time=t,
             names=tuple(p.job_name for p in placements),
-            latencies=tuple(p.bound_s for p in placements),
+            latencies=tuple(p.bound_s if wait is None
+                            else wait[p.job_name] + p.bound_s
+                            for p in placements),
             backlog_before=before,
             backlog_after=after,
-            solve_s=float(self.last_plan.meta.get("solve_s", 0.0)),
+            solve_s=self.last_solve_s,
         ))
         return placements
 
@@ -313,18 +376,7 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     ``trace.replay_completions``.
     """
     rng = np.random.default_rng(seed)
-    params = dict(process_params or {})
-    if process in ("poisson", "bursty"):
-        if rate is not None:
-            params.setdefault("rate", rate)
-    elif process == "diurnal":
-        if rate is not None:
-            params.setdefault("peak_rate", rate)
-            params.setdefault("base_rate", params["peak_rate"] / 5.0)
-    elif rate is not None and process in A.available():
-        raise ValueError(
-            f"run_online(rate=...) has no defined mapping onto process "
-            f"{process!r}; pass its rate parameters via process_params=")
+    params = A.resolve_rate(process, rate, process_params)
     times = A.make_process(process, **params)(rng, horizon)
     sched = OnlineScheduler(scenario.topology, method=method,
                             drain_queues=drain_queues, **solver_opts)

@@ -173,6 +173,11 @@ class RoutedScheduler:
                           Topology, float, C.CommittedWork | None,
                           C.CommittedWork | None] | None = None
         self.last_plan: Plan | None = None
+        # Solver wall-time telemetry: per-call and cumulative.  The
+        # streaming pipeline's "measured" latency model reads these to put
+        # real solve latency on the simulated clock.
+        self.last_solve_s: float = 0.0
+        self.total_solve_s: float = 0.0
 
     # -- compatibility views ------------------------------------------------
     @property
@@ -319,6 +324,8 @@ class RoutedScheduler:
         if self.ledger is not None or self.commit_log is not None:
             plan = self._ledger_commit(topo, batch, plan, pre_state, names)
         self.last_plan = plan
+        self.last_solve_s = float(plan.meta.get("solve_s", 0.0))
+        self.total_solve_s += self.last_solve_s
         return plan
 
     def _ledger_commit(self, topo: Topology, batch: J.JobBatch, plan: Plan,

@@ -257,3 +257,40 @@ def test_trace_to_dict_roundtrips_json():
     blob = json.loads(json.dumps(tr.to_dict()))
     assert blob["arrivals"] == len(tr.records)
     assert len(blob["backlogs"]) == len(tr.records)
+
+
+def test_trace_to_dict_keeps_exact_drain_results():
+    """to_dict must not drop completions/replay_completions or the
+    actual-latency percentiles — the exact-drain results PR 4/5 compute."""
+    import json
+    sc = make_scenario("paper-small", seed=0)
+    rate = sc.nominal_rate(0.6)
+    tr = run_online(sc, horizon=6 / rate, seed=7, rate=rate, drain="exact",
+                    track_commits=True, finish=True)
+    assert tr.completions and tr.replay_completions
+    blob = json.loads(json.dumps(tr.to_dict()))
+    assert blob["completions"] == tr.completions
+    assert blob["replay_completions"] == tr.replay_completions
+    assert len(blob["actual_latencies"]) == len(tr.actual_latencies())
+    assert "p99_actual_s" in blob and "p50_actual_s" in blob
+    # names serialize alongside, so actuals stay alignable after a reload
+    assert blob["names"] == [list(r.names) for r in tr.records]
+
+
+def test_advance_to_guard_is_relative_at_large_clocks():
+    """The backwards-clock guard must scale with the clock (time_eps): at
+    t ~ 1e12 an absolute 1e-9 slack is below one ulp, so float-accumulation
+    jitter on a legitimate same-instant event would be rejected."""
+    from repro.core import schedule
+
+    _, sched = _edge_cloud_sched()
+    big = 1e12
+    sched.advance_to(big)
+    # within tolerance: one ulp of slack at this magnitude is ~0.000122 s,
+    # far above the old absolute 1e-9 guard
+    jitter = big - 0.25 * schedule.time_eps(big)
+    assert jitter < big  # representable below the clock
+    sched.advance_to(jitter)           # must not raise
+    assert sched.now == big            # ...and the clock never rolls back
+    with pytest.raises(ValueError, match="backwards"):
+        sched.advance_to(big - 10 * schedule.time_eps(big))
