@@ -33,9 +33,9 @@ def main() -> None:
         dt = time.time() - t0
         results.append((name, dt * 1e6, derive(rows)))
 
-    from . import bound_gap, drain_bench, fig5_small, fig_large, \
-        kernel_bench, online_bench, roofline, runtime_scaling, \
-        solver_compare, stream_bench
+    from . import bound_gap, drain_bench, fault_bench, fig5_small, \
+        fig_large, kernel_bench, online_bench, roofline, \
+        runtime_scaling, solver_compare, stream_bench
 
     def _solver_ratio(rows):
         by = {r["method"]: r for r in rows}
@@ -58,6 +58,11 @@ def main() -> None:
           lambda r: (f"match={r['all_pipeline_match_serial']},"
                      f"bounded={r['all_bounded']},"
                      f"best={max((x['best_at_equal_p99']['speedup'] for x in r['rows'] if x['best_at_equal_p99']), default=float('nan')):.2f}x")
+          if r else "n/a")
+    bench("fault", lambda: fault_bench.run(smoke=True, verbose=False),
+          lambda r: (f"replay={r['all_replay_match']},"
+                     f"bounded={r['all_requeue_bounded']},"
+                     f"requeue_p99_vs_oracle={r['rows'][0]['policies']['requeue'].get('p99_vs_oracle', float('nan')):.2f}x")
           if r else "n/a")
     bench("drain", lambda: drain_bench.run(smoke=True),
           lambda r: (f"match={r['all_indexed_match_ref']},"

@@ -39,10 +39,15 @@ lazily from its immutable job records.  ``engine="ref"`` runs the seed
 linear-scan loop (:func:`repro.core.schedule.run_event_loop_ref`) — the
 parity reference ``benchmarks/drain_bench.py`` gates against.
 
-``health`` records ``report_slowdown`` events ``(time, node, factor)`` on
-the same log, so :func:`replay_piecewise` can replay the ground truth
-segment by segment at the topology that was actually in effect — not a
-single end-state topology for the whole horizon.
+``health`` records infrastructure events ``(time, key, factor)`` on the
+same log — ``report_slowdown`` factors on node keys, and (since the fault
+layer) full *availability*: ``factor=inf`` marks the keyed node or
+directed link down, any finite factor marks it up again at that slowdown
+(recovery records ``1.0``).  ``removed`` records fault-policy withdrawals
+``(time, name)``.  :func:`replay_piecewise` merges both histories and
+replays the ground truth segment by segment at the effective topology
+(and resource availability) actually in force — not a single end-state
+topology for the whole horizon.
 
 Priorities are ledger-global: plans committed earlier hold strictly higher
 priority than later ones (each batch was solved against the queue state its
@@ -56,7 +61,7 @@ import dataclasses
 import numpy as np
 
 from . import eventsim, schedule
-from .state import QueueState, Topology
+from .state import QueueState, Topology, effective_topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,23 +100,88 @@ class CommittedWork:
     # Completion records are keyed by job name, so names must be unique for
     # the lifetime of the ledger; commit() enforces it against this set.
     names_seen: frozenset[str] = frozenset()
-    # Health history: (absolute time, node, slowdown factor) events, in
-    # record order.  A pure annotation — drains ignore it (the caller picks
-    # the effective topology per window); replay_piecewise() consumes it.
-    health: tuple[tuple[float, int, float], ...] = ()
+    # Health history: (absolute time, key, factor) events in record order,
+    # where key is a node index or a ("link", u, v) tuple.  A finite factor
+    # is a slowdown (the node/link is up at mu/factor; 1.0 = full health);
+    # factor=inf marks the resource *unavailable* — a node failure takes
+    # its incident links down implicitly.  A pure annotation — drains
+    # ignore it (the caller picks the effective topology per window);
+    # replay_piecewise() consumes it.
+    health: tuple[tuple[float, object, float], ...] = ()
+    # Fault-policy withdrawals: (absolute time, job name).  Jobs stay in a
+    # pure commit *log* until the replay reaches the removal instant; a
+    # live ledger drops them immediately (remove_jobs) and records here.
+    removed: tuple[tuple[float, str], ...] = ()
 
     @classmethod
     def empty(cls, num_nodes: int, clock: float = 0.0) -> "CommittedWork":
         return cls(num_nodes=int(num_nodes), clock=float(clock))
 
+    def record_health(self, at: float, key, factor: float) -> "CommittedWork":
+        """Annotate the log with a health event on ``key`` (a node index or
+        ``("link", u, v)``).  ``factor`` follows the scheduler's "factor=2
+        = half speed" convention; ``inf`` marks the resource down, any
+        finite factor marks it up again at that slowdown."""
+        if isinstance(key, tuple):
+            if len(key) != 3 or key[0] != "link":
+                raise ValueError(
+                    f"health key must be a node index or ('link', u, v), "
+                    f"got {key!r}")
+            key = ("link", int(key[1]), int(key[2]))
+        else:
+            key = int(key)
+        return dataclasses.replace(
+            self, health=self.health + ((float(at), key, float(factor)),))
+
     def record_slowdown(self, at: float, node: int,
                         factor: float) -> "CommittedWork":
-        """Annotate the log with a health event (``factor=2`` = half speed,
-        the scheduler's convention); replay_piecewise() replays segment by
-        segment at the recorded factors."""
+        """Annotate the log with a node health event (``factor=2`` = half
+        speed, the scheduler's convention); replay_piecewise() replays
+        segment by segment at the recorded factors."""
+        return self.record_health(at, int(node), factor)
+
+    def record_removal(self, at: float, names) -> "CommittedWork":
+        """Annotate a commit *log* with fault-policy withdrawals: the named
+        jobs were requeued/migrated/lost at ``at``.  The job records stay
+        (the replay serves them up to the removal instant, then drops the
+        residual); a *live* ledger removes jobs via :meth:`remove_jobs`."""
         return dataclasses.replace(
-            self, health=self.health + ((float(at), int(node),
-                                         float(factor)),))
+            self, removed=self.removed + tuple(
+                (float(at), str(n)) for n in names))
+
+    def remove_jobs(self, names, *, at: float | None = None,
+                    missing_ok: bool = False,
+                    record: bool = True) -> "CommittedWork":
+        """Withdraw live jobs by name (a fault policy re-placing or
+        shedding their residual work).  Served work stays served; no
+        completion is recorded.  Unknown or already-completed names raise
+        unless ``missing_ok`` (the replay path tolerates jobs that finished
+        marginally before their recorded removal).  ``record=False`` skips
+        the ``removed`` annotation (used by the replay itself, whose event
+        list is already fixed)."""
+        at = self.clock if at is None else float(at)
+        want = set(map(str, names))
+        live = {j.name for j in self.jobs}
+        if not missing_ok and not want <= live:
+            raise ValueError(
+                f"cannot remove unknown/completed job(s) "
+                f"{sorted(want - live)}: only live committed jobs can be "
+                f"withdrawn (pass missing_ok=True to skip them)")
+        hit = want & live
+        new = dataclasses.replace(
+            self,
+            jobs=tuple(j for j in self.jobs if j.name not in hit),
+            removed=self.removed + tuple(sorted((at, n) for n in hit))
+            if record else self.removed)
+        eng = _engine_of(self)
+        if eng is not None:
+            try:
+                eng.remove(hit)
+            except Exception:
+                eng.stamp += 1     # poison the half-mutated index
+                raise
+            _attach(new, eng)
+        return new
 
     # -- committing plans -----------------------------------------------------
     def commit(self, batch, plan, *, names=None,
@@ -262,13 +332,17 @@ class _LedgerEngine:
     into :class:`CommittedWork` records."""
 
     def __init__(self, ledger: CommittedWork, mu_node: np.ndarray,
-                 mu_link: np.ndarray):
+                 mu_link: np.ndarray, down: tuple = ()):
         self.eng = eventsim.EventEngine(mu_node, mu_link, clock=ledger.clock)
         self.jobs: list[LedgerJob] = list(ledger.jobs)
         self.names: list[str] = [j.name for j in self.jobs]
         self._live: list[int] = list(range(len(self.jobs)))
         self._folded = 0   # completions already folded into the chain
         self.stamp = 0
+        # Failed resources must be marked before indexing: a ready task on
+        # one would otherwise be seated at its (zeroed) effective rate.
+        for res in down:
+            self.eng.remove_resource(res)
         self.eng.add_tasks([_task_of(j) for j in ledger.jobs])
 
     def commit(self, added: list[LedgerJob]) -> None:
@@ -277,6 +351,12 @@ class _LedgerEngine:
         self.names.extend(j.name for j in added)
         self._live.extend(range(base, len(self.jobs)))
         self.eng.add_tasks([_task_of(j) for j in added])
+
+    def remove(self, names) -> None:
+        """Withdraw live tasks by name (see ``CommittedWork.remove_jobs``)."""
+        self.eng.remove_tasks(
+            [i for i in self._live
+             if self.names[i] in names and not self.eng.tasks[i].done])
 
     def bloated(self) -> bool:
         """Completed-task shells now outweigh the live set: retaining the
@@ -339,10 +419,10 @@ def _check_engine(engine: str) -> None:
 
 
 def _live_engine(ledger: CommittedWork, mu_node: np.ndarray,
-                 mu_link: np.ndarray) -> _LedgerEngine:
+                 mu_link: np.ndarray, down: tuple = ()) -> _LedgerEngine:
     eng = _engine_of(ledger)
     if eng is None:
-        eng = _LedgerEngine(ledger, mu_node, mu_link)
+        eng = _LedgerEngine(ledger, mu_node, mu_link, down)
     return eng
 
 
@@ -361,8 +441,26 @@ def warm_engine(topo: Topology, ledger: CommittedWork) -> CommittedWork:
     return ledger
 
 
+def down_keys(topo: Topology, avail_node, link_up=None) -> tuple:
+    """Resource keys the event engines must treat as failed.
+
+    Failed nodes, every *existing* link (base mu > 0) incident to one — a
+    dead node cannot relay — and explicitly failed links.  The engine-side
+    companion of :func:`repro.core.state.effective_topology`'s rate masks.
+    """
+    avail = np.asarray(avail_node, bool)
+    mu_link = np.asarray(topo.mu_link)
+    keys: list[tuple] = [("node", int(u)) for u in np.flatnonzero(~avail)]
+    bad = ~avail[:, None] | ~avail[None, :]
+    if link_up is not None:
+        bad |= ~np.asarray(link_up, bool)
+    for u, v in zip(*np.nonzero(bad & (mu_link > 0))):
+        keys.append(("link", int(u), int(v)))
+    return tuple(keys)
+
+
 def drain_exact(topo: Topology, ledger: CommittedWork, dt, *,
-                engine: str = "indexed") -> CommittedWork:
+                engine: str = "indexed", down: tuple = ()) -> CommittedWork:
     """Advance the ledger ``dt`` seconds with preempt-resume priority service.
 
     The exact counterpart of the fluid ``QueueState.advance``: every
@@ -381,6 +479,11 @@ def drain_exact(topo: Topology, ledger: CommittedWork, dt, *,
     the returned ledger carries the live index, so the next drain/commit
     in the chain is incremental.  ``engine="ref"`` rebuilds ``TaskRun``
     records and runs the seed linear-scan loop (the parity reference).
+
+    ``down`` is the authoritative set of resource keys failed *throughout
+    this window* (work targeting them waits; served work stays served) —
+    typically :func:`down_keys` of the scheduler's availability masks.
+    Resources absent from it are restored on the persistent engine.
     """
     _check_engine(engine)
     dt = float(dt)
@@ -399,11 +502,11 @@ def drain_exact(topo: Topology, ledger: CommittedWork, dt, *,
     if engine == "ref":
         tasks = _tasks_of(ledger)
         schedule.run_event_loop_ref(tasks, mu_node, mu_link, t=ledger.clock,
-                                    t_end=t_end)
+                                    t_end=t_end, down=down)
         return _fold(ledger, tasks, t_end)
-    eng = _live_engine(ledger, mu_node, mu_link)
+    eng = _live_engine(ledger, mu_node, mu_link, down)
     try:
-        eng.eng.set_rates(mu_node, mu_link)
+        eng.eng.sync(mu_node, mu_link, down)
         eng.eng.advance(t_end)
     except Exception:
         eng.stamp += 1   # poison the cache: rebuilds are always safe
@@ -413,8 +516,9 @@ def drain_exact(topo: Topology, ledger: CommittedWork, dt, *,
 
 
 def run_to_completion(topo: Topology, ledger: CommittedWork, *,
-                      engine: str = "indexed") -> tuple[dict[str, float],
-                                                        "CommittedWork"]:
+                      engine: str = "indexed",
+                      down: tuple = ()) -> tuple[dict[str, float],
+                                                 "CommittedWork"]:
     """Serve every committed job to completion; the ground-truth replay.
 
     Returns ``({name: absolute completion time} — including jobs already
@@ -423,6 +527,10 @@ def run_to_completion(topo: Topology, ledger: CommittedWork, *,
     the whole arrival history (jobs start at their ``release`` times); on a
     live exact ledger it finishes the residual work — the two must agree,
     which the fidelity benchmark checks.
+
+    ``down`` resources stay failed for the whole run: a job still needing
+    one can never complete, so stuck work raises — clear it first
+    (recovery policies requeue, migrate, or shed it).
     """
     _check_engine(engine)
     completions = dict(ledger.completed)
@@ -433,12 +541,12 @@ def run_to_completion(topo: Topology, ledger: CommittedWork, *,
     if engine == "ref":
         tasks = _tasks_of(ledger)
         t = schedule.run_event_loop_ref(tasks, mu_node, mu_link,
-                                        t=ledger.clock)
+                                        t=ledger.clock, down=down)
         out = _fold(ledger, tasks, max(ledger.clock, t))
     else:
-        eng = _live_engine(ledger, mu_node, mu_link)
+        eng = _live_engine(ledger, mu_node, mu_link, down)
         try:
-            eng.eng.set_rates(mu_node, mu_link)
+            eng.eng.sync(mu_node, mu_link, down)
             t = eng.eng.advance(np.inf)
         except Exception:
             eng.stamp += 1
@@ -455,28 +563,59 @@ def replay_piecewise(topo: Topology, log: CommittedWork, *,
                                                        "CommittedWork"]:
     """Ground-truth replay honouring the log's recorded health history.
 
-    Drains the log segment by segment between its ``health`` events — each
-    window at the effective (straggler-scaled) topology that was actually
-    in force — then serves the final segment to completion.  With an empty
-    health log this is exactly :func:`run_to_completion` on the base
-    topology.  Returns the same ``(completions, drained ledger)`` pair.
+    Drains the log segment by segment between its ``health`` and
+    ``removed`` events — each window at the effective topology (and
+    resource availability) actually in force — then serves the final
+    segment to completion.  With an empty event history this is exactly
+    :func:`run_to_completion` on the base topology.  Returns the same
+    ``(completions, drained ledger)`` pair.
 
-    The slowdown vector is maintained float32 and applied as
-    ``topo.scale_nodes(1 / factors)`` — bit-for-bit the scheduler's
-    ``_effective_topology``, so the replay sees the same rates the online
-    drains did.
+    Event semantics per key: a node's finite factor is a slowdown (and
+    marks it up — recovery records ``1.0``), ``inf`` marks it down along
+    with every incident link; a ``("link", u, v)`` key toggles that
+    directed link (finite = up, ``inf`` = down).  A removal withdraws the
+    named job's residual work at its recorded instant (the fault policy
+    requeued/migrated/shed it; a requeue reappears as its own later
+    commit).  At equal times health events apply before removals — the
+    order the scheduler emits them in.
+
+    The slowdown vector is maintained float32 and applied through
+    :func:`repro.core.state.effective_topology` — bit-for-bit the
+    scheduler's ``_effective_topology``, so the replay sees the same rates
+    the online drains did.
     """
-    import jax.numpy as jnp
+    V = log.num_nodes
+    slow = np.ones((V,), np.float32)
+    avail = np.ones((V,), bool)
+    link_up = np.ones((V, V), bool)
 
-    slow = np.ones((log.num_nodes,), np.float32)
+    def _eff_down():
+        if avail.all() and link_up.all():
+            # pre-fault fast path: bit-identical to the health-only replay
+            return effective_topology(topo, slow), ()
+        return (effective_topology(topo, slow, avail, link_up),
+                down_keys(topo, avail, link_up))
+
+    events = [(float(at), 0, key, factor) for at, key, factor in log.health]
+    events += [(float(at), 1, name, 0.0) for at, name in log.removed]
     cur = log
-    for at, node, factor in sorted(log.health, key=lambda e: e[0]):
-        eff = topo.scale_nodes(1.0 / jnp.asarray(slow))
-        cur = drain_exact(eff, cur, max(float(at) - cur.clock, 0.0),
-                          engine=engine)
-        slow[int(node)] = factor
-    eff = topo.scale_nodes(1.0 / jnp.asarray(slow))
-    return run_to_completion(eff, cur, engine=engine)
+    for at, kind, key, factor in sorted(events, key=lambda e: (e[0], e[1])):
+        eff, down = _eff_down()
+        cur = drain_exact(eff, cur, max(at - cur.clock, 0.0),
+                          engine=engine, down=down)
+        if kind == 1:
+            # tolerate a job that completed marginally before its removal
+            cur = cur.remove_jobs([key], at=at, missing_ok=True,
+                                  record=False)
+        elif isinstance(key, tuple):
+            link_up[key[1], key[2]] = np.isfinite(factor)
+        elif np.isfinite(factor):
+            slow[int(key)] = factor
+            avail[int(key)] = True
+        else:
+            avail[int(key)] = False
+    eff, down = _eff_down()
+    return run_to_completion(eff, cur, engine=engine, down=down)
 
 
 def _backlog_arrays(mu_node: np.ndarray, mu_link: np.ndarray,

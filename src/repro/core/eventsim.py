@@ -85,6 +85,7 @@ class EventEngine:
         self.live = 0                          # unfinished tasks
         self.events_processed = 0              # real (non-stale) events
         self.completions: list[tuple[int, float]] = []  # (task index, time)
+        self._down: set[int] = set()           # failed resource ids
 
     # -- resource ids ---------------------------------------------------------
     def _res_id(self, res: tuple) -> int:
@@ -160,6 +161,90 @@ class EventEngine:
         for rid, i in list(self._head.items()):
             self._set_head(rid, i, t)   # epoch bump invalidates the old event
 
+    # -- availability ---------------------------------------------------------
+    def remove_resource(self, res: tuple) -> None:
+        """Mark a resource failed from ``now`` on (idempotent).
+
+        The serving head (if any) is materialized — work served before the
+        failure stays served — and unseated; its scheduled completion event
+        goes stale via the epoch guard (lazy invalidation, nothing is
+        searched or removed from the heaps).  Ready tasks stay indexed and
+        simply wait; no new head is seated until :meth:`restore_resource`.
+        Clearing the blocked work itself (requeue / migrate / shed) is the
+        recovery policy's job, via :meth:`remove_tasks`.
+        """
+        rid = self._res_id(res)
+        if rid in self._down:
+            return
+        self._down.add(rid)
+        if rid in self._head:
+            self._touch(rid, self.now)
+            del self._head[rid]
+            del self._head_since[rid]
+            self._epoch[rid] = self._epoch.get(rid, 0) + 1
+
+    def restore_resource(self, res: tuple) -> None:
+        """Resource recovered (idempotent): the highest-priority ready task
+        blocked on it resumes serving from ``now`` at its banked residual."""
+        rid = self._res_id(res)
+        if rid not in self._down:
+            return
+        self._down.discard(rid)
+        top = self._peek(rid)
+        if top is not None:
+            self._set_head(rid, top, self.now)
+
+    def remove_tasks(self, idxs) -> None:
+        """Withdraw live tasks from the simulation (fault policies: the
+        job's remaining work is requeued elsewhere, migrated, or lost).
+
+        Work already served stays served; every residual stage leaves the
+        incremental backlog arrays.  No completion is recorded — the task
+        goes done-without-completion, so a ledger fold simply drops it from
+        the live set.  Index entries (ready heaps, pending events) go stale
+        lazily, exactly like a preemption.
+        """
+        t = self.now
+        freed = set()
+        for i in idxs:
+            task = self.tasks[i]
+            if task.done:
+                continue
+            sres = self._stage_res[i]
+            rid = sres[task.ptr]
+            if self._head.get(rid) == i:
+                self._touch(rid, t)   # bank the partial service
+                del self._head[rid]
+                del self._head_since[rid]
+                self._epoch[rid] = self._epoch.get(rid, 0) + 1
+                freed.add(rid)
+            for k in range(task.ptr, len(task.stages)):
+                w = (task.remaining if k == task.ptr
+                     and task.remaining is not None else task.stages[k][1])
+                self._q[sres[k]] -= w
+            task.done = True          # withdrawn, not served to completion
+            self.live -= 1
+        for rid in freed:
+            top = self._peek(rid)
+            if top is not None:
+                self._set_head(rid, top, t)
+
+    def sync(self, mu_node, mu_link, down=()) -> None:
+        """Rates + availability in one step, in the only safe order.
+
+        ``down`` is the *authoritative* set of currently-failed resource
+        keys: resources newly failed are unseated **before** re-pricing (a
+        busy head on a zeroed rate would otherwise trip the dead-resource
+        guard), and recoveries are re-seated **after** (at their new
+        rates).  Passing ``down=()`` restores everything.
+        """
+        want = {self._res_id(res) for res in down}
+        for rid in sorted(want - self._down):
+            self.remove_resource(self._res_key(rid))
+        self.set_rates(mu_node, mu_link)
+        for rid in sorted(self._down - want):
+            self.restore_resource(self._res_key(rid))
+
     # -- index internals ------------------------------------------------------
     def _push_event(self, time: float, kind: int, a: int, b: int) -> None:
         self._seq += 1
@@ -190,6 +275,8 @@ class EventEngine:
         self._head_since[rid] = t
 
     def _set_head(self, rid: int, i: int, t: float) -> None:
+        if rid in self._down:
+            return                    # failed resource serves nothing
         task = self.tasks[i]
         rate = self._rate[rid]
         if rate <= 0:
@@ -203,6 +290,8 @@ class EventEngine:
 
     def _contest(self, rid: int, t: float) -> None:
         """Re-decide the serving head after ready-heap pushes."""
+        if rid in self._down:
+            return                    # ready work waits out the outage
         top = self._peek(rid)
         cur = self._head.get(rid)
         if top is None or top == cur:
@@ -287,6 +376,13 @@ class EventEngine:
             self.now = t_end
             return t_end if self.live > 0 else last
         if self.live > 0:
+            if self._down:
+                raise RuntimeError(
+                    f"{self.live} live task(s) blocked on failed resources "
+                    f"{sorted(self._res_key(r) for r in self._down)} with "
+                    f"no pending events: restore the resources or clear "
+                    f"the work first (recovery policies requeue, migrate, "
+                    f"or shed it)")
             raise RuntimeError(
                 "event engine stalled with live tasks and no events — "
                 "index invariant broken")
@@ -312,13 +408,17 @@ class EventEngine:
 
 def run_event_loop_indexed(tasks: list[schedule.TaskRun], mu_node, mu_link,
                            *, t: float = 0.0, t_end: float = np.inf,
-                           guard: int = 1_000_000) -> float:
+                           guard: int = 1_000_000,
+                           down: tuple = ()) -> float:
     """Drop-in replacement for :func:`repro.core.schedule.run_event_loop_ref`.
 
     Builds a fresh engine over ``tasks`` and advances it — same mutation
-    contract, same return value.  For the persistent (cross-window) use
-    hold an :class:`EventEngine` instead.
+    contract, same return value.  ``down`` lists resource keys failed for
+    the whole window (work on them waits).  For the persistent
+    (cross-window) use hold an :class:`EventEngine` instead.
     """
     eng = EventEngine(mu_node, mu_link, clock=t, guard=guard)
+    for res in down:
+        eng.remove_resource(res)
     eng.add_tasks(tasks)
     return eng.advance(t_end)

@@ -173,7 +173,8 @@ def _resource_rate(res: tuple, mu_node: np.ndarray,
 
 def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
                        mu_link: np.ndarray, *, t: float = 0.0,
-                       t_end: float = np.inf, guard: int = 1_000_000) -> float:
+                       t_end: float = np.inf, guard: int = 1_000_000,
+                       down: frozenset | tuple = ()) -> float:
     """Preempt-resume priority service of ``tasks`` over ``[t, t_end]``.
 
     Every resource serves the highest-priority arrived task (strict
@@ -184,6 +185,12 @@ def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
     ``t_end`` is the incremental drain window used by the committed-work
     ledger.
 
+    ``down`` lists resource keys failed for the whole window: tasks whose
+    current stage targets one wait (no service, no dead-resource error).
+    Work stuck behind an outage at an infinite ``t_end`` raises — the
+    caller must restore the resource or clear the work (recovery
+    policies requeue / migrate / shed it) before running to completion.
+
     This is the seed's linear-scan loop (the semantic reference for
     :mod:`repro.core.eventsim`): each event rescans every task.  Service
     rates are hoisted into per-stage arrays up front — the rate of a
@@ -193,6 +200,7 @@ def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
     # Hoisted per-stage service rates, indexed [task][stage].
     stage_rates = [[_resource_rate(res, mu_node, mu_link)
                     for res, _ in task.stages] for task in tasks]
+    down = frozenset(down)
     for task in tasks:
         if not task.done and task.ptr >= len(task.stages):
             task.done = True
@@ -211,13 +219,25 @@ def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
             res, work = task.stages[task.ptr]
             if task.remaining is None:
                 task.remaining = work
+            if res in down:
+                continue              # blocked on a failed resource
             cur = serving.get(res)
             if cur is None or task.prio < cur[0].prio:
                 serving[res] = (task, rates[task.ptr])
         if not serving:
-            # advance to the next stage-arrival (nothing serveable now)
-            nxt = min(task.arrived for task in tasks if not task.done)
+            # advance to the next stage-arrival (nothing serveable now).
+            # With failed resources, live tasks may be *stuck* with
+            # arrived <= t — jumping to min(arrived) would freeze the
+            # clock and spin the guard out; only future arrivals advance.
+            nxt = min((task.arrived for task in tasks
+                       if not task.done and task.arrived > t + eps),
+                      default=np.inf)
             if nxt >= t_end:
+                if not np.isfinite(t_end) and not np.isfinite(nxt):
+                    raise RuntimeError(
+                        f"event loop stalled: live tasks blocked on "
+                        f"failed resources {sorted(down)} — restore them "
+                        f"or clear the work before running to completion")
                 return t_end if np.isfinite(t_end) else t
             t = nxt
             continue
@@ -254,23 +274,25 @@ def run_event_loop_ref(tasks: list[TaskRun], mu_node: np.ndarray,
 def run_event_loop(tasks: list[TaskRun], mu_node: np.ndarray,
                    mu_link: np.ndarray, *, t: float = 0.0,
                    t_end: float = np.inf, guard: int = 1_000_000,
-                   engine: str = "ref") -> float:
+                   engine: str = "ref", down: frozenset | tuple = ()) -> float:
     """Run the preempt-resume loop with the chosen engine.
 
     ``engine="ref"`` (default) is the seed linear-scan loop;
     ``engine="indexed"`` routes through the O(log)-per-event engine of
     :mod:`repro.core.eventsim` — same semantics, same tolerance
     discipline, event times equal up to float accumulation order (gated by
-    the parity tests and ``benchmarks/drain_bench.py``).
+    the parity tests and ``benchmarks/drain_bench.py``).  ``down`` lists
+    resource keys failed for the whole window (both engines honour it).
     """
     if engine == "indexed":
         from . import eventsim
         return eventsim.run_event_loop_indexed(
-            tasks, mu_node, mu_link, t=t, t_end=t_end, guard=guard)
+            tasks, mu_node, mu_link, t=t, t_end=t_end, guard=guard,
+            down=tuple(down))
     if engine != "ref":
         raise ValueError(f"engine must be 'ref' or 'indexed', got {engine!r}")
     return run_event_loop_ref(tasks, mu_node, mu_link, t=t, t_end=t_end,
-                              guard=guard)
+                              guard=guard, down=down)
 
 
 def simulate(net: ComputeNetwork, batch: JobBatch, assign, order=None,

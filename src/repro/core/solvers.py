@@ -125,3 +125,11 @@ def _solve_sa(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
 def _solve_exact(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
     from . import exact
     return exact.exact_plan(net, batch, **opts)
+
+
+@register("migrate")
+def _solve_migrate(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    # Importing the fault layer re-registers the real function over this
+    # stub; either path runs the same solver.
+    from repro.serving import faults
+    return faults.migrate_solve(net, batch, **opts)

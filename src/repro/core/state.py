@@ -69,6 +69,33 @@ class Topology:
                         mu_link=self.mu_link)
 
 
+def effective_topology(topo: Topology, slowdown,
+                       avail_node=None, link_up=None) -> Topology:
+    """Health-scaled *view* of a topology: the one rate computation shared
+    by the online scheduler's drains/solves and the piecewise ground-truth
+    replay, so both always see bit-identical effective rates.
+
+    ``slowdown`` [V] follows the "factor=2 means half speed" convention
+    (float32 in both callers).  ``avail_node`` [V] bool zeroes failed
+    nodes' compute *and* every incident link (a dead node cannot relay);
+    ``link_up`` [V, V] bool zeroes individually failed directed links.
+    With both masks omitted this is exactly ``scale_nodes(1/slowdown)`` —
+    the pre-fault expression, preserved bit-for-bit.
+    """
+    if avail_node is None and link_up is None:
+        return topo.scale_nodes(1.0 / jnp.asarray(slowdown))
+    avail = (np.ones((topo.num_nodes,), bool) if avail_node is None
+             else np.asarray(avail_node, bool))
+    scale = jnp.where(jnp.asarray(avail),
+                      1.0 / jnp.asarray(slowdown), 0.0)
+    mask = avail[:, None] & avail[None, :]
+    if link_up is not None:
+        mask = mask & np.asarray(link_up, bool)
+    return Topology(mu_node=topo.mu_node * scale,
+                    mu_link=topo.mu_link * jnp.asarray(mask,
+                                                       topo.mu_link.dtype))
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QueueState:

@@ -17,6 +17,12 @@ driver):
     (``StragglerMonitor``); (2) serving — slow replicas accumulate queue
     backlog Q_u, which the paper's routing objective (waiting term Q_u/mu_u)
     automatically routes around: see serving/scheduler.py.
+
+This module is the *training-side* story: work is recomputed from a
+checkpoint.  The serving-side counterpart — typed node/link
+failure/recovery events on the serving clock, with stranded inference
+work rerouted (requeue / migrate / lost) rather than recomputed — lives
+in :mod:`repro.serving.faults`.
 """
 from __future__ import annotations
 

@@ -68,6 +68,14 @@ class OnlineTrace:
     replay_completions: dict[str, float] = dataclasses.field(
         default_factory=dict)
     commit_log: "C.CommittedWork | None" = None
+    # Per-request *original* arrival instants (filled by submit_window):
+    # a fault-requeued job is committed later under a new name but keeps
+    # its original arrival here, so actual latency spans the outage.
+    arrivals_by_name: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # Fault-policy losses: (name, reason) for requests that will never
+    # complete (shed by the lost policy, unreachable after a failure, ...).
+    lost: list[tuple[str, str]] = dataclasses.field(default_factory=list)
 
     @property
     def times(self) -> np.ndarray:
@@ -112,11 +120,16 @@ class OnlineTrace:
 
         Uses the exact drain's recorded completions, falling back to the
         ground-truth replay record; requests with no known completion are
-        skipped (run with ``finish=True`` to complete every job).
+        skipped (run with ``finish=True`` to complete every job).  Arrival
+        instants come from :attr:`arrivals_by_name` where recorded (a
+        fault-requeued job keeps its original arrival), else the commit
+        record's time.
         """
         comps = self.completions or self.replay_completions
-        return np.array([comps[n] - r.time for r in self.records
-                         for n in r.names if n in comps], np.float64)
+        return np.array(
+            [comps[n] - self.arrivals_by_name.get(n, r.time)
+             for r in self.records for n in r.names if n in comps],
+            np.float64)
 
     def summary(self) -> dict:
         out = {
@@ -132,6 +145,8 @@ class OnlineTrace:
         if act.size:
             out["p50_actual_s"] = float(np.percentile(act, 50))
             out["p99_actual_s"] = float(np.percentile(act, 99))
+        if self.lost:
+            out["lost"] = len(self.lost)
         return out
 
     def to_dict(self) -> dict:
@@ -203,7 +218,8 @@ class OnlineScheduler(RoutedScheduler):
     def submit_window(self, t: float, infer_jobs: Sequence[J.InferenceJob],
                       *, arrivals: Sequence[float] | None = None,
                       pad_to: int | None = None,
-                      solve_mode: str = "batched") -> list[Placement]:
+                      solve_mode: str = "batched",
+                      method: str | None = None) -> list[Placement]:
         """Window-batched submission (the streaming pipeline's hook).
 
         ``t`` is the *commit* instant: the state drains to it and the whole
@@ -245,12 +261,17 @@ class OnlineScheduler(RoutedScheduler):
         if solve_mode == "sequential" and len(infer_jobs) > 1:
             placements, walls = [], 0.0
             for job in infer_jobs:
-                placements.extend(self.schedule_jobs([job], pad_to=pad_to))
+                placements.extend(self.schedule_jobs([job], pad_to=pad_to,
+                                                     method=method))
                 walls += self.last_solve_s
             self.last_solve_s = walls
         else:
-            placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to)
+            placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to,
+                                            method=method)
         after = backlog_seconds(eff, self.state)
+        arrs = arrivals if arrivals is not None else [t] * len(infer_jobs)
+        self.trace.arrivals_by_name.update(
+            {j.name: float(a) for j, a in zip(infer_jobs, arrs)})
         self.trace.records.append(ArrivalRecord(
             time=t,
             names=tuple(p.job_name for p in placements),
@@ -278,6 +299,40 @@ class OnlineScheduler(RoutedScheduler):
         super().report_slowdown(node, factor)
         self.trace.events.append({"time": self.now, "event": "slowdown",
                                   "node": int(node), "factor": float(factor)})
+
+    def report_recovery(self, node: int, *, at: float | None = None) -> None:
+        """Recovery event on the clock: drain to ``at`` (default: now) at
+        the still-degraded rates, then restore the node to full health."""
+        self._check_slowdown(node, 1.0)     # reject before the clock moves
+        if at is not None:
+            self.advance_to(at)
+        RoutedScheduler.report_slowdown(self, node, 1.0)
+        self.trace.events.append({"time": self.now, "event": "recovery",
+                                  "node": int(node)})
+
+    def set_node_availability(self, node: int, up: bool,
+                              *, at: float | None = None) -> None:
+        """Availability event on the clock: drain to ``at`` (default: now)
+        under the pre-event health, then fail/recover the node."""
+        self._check_node(node)              # reject before the clock moves
+        if at is not None:
+            self.advance_to(at)
+        super().set_node_availability(node, up)
+        self.trace.events.append(
+            {"time": self.now, "event": "node_up" if up else "node_down",
+             "node": int(node)})
+
+    def set_link_availability(self, u: int, v: int, up: bool,
+                              *, at: float | None = None) -> None:
+        """Directed-link availability event on the clock (see
+        :meth:`set_node_availability`)."""
+        self._check_node(u), self._check_node(v)
+        if at is not None:
+            self.advance_to(at)
+        super().set_link_availability(u, v, up)
+        self.trace.events.append(
+            {"time": self.now, "event": "link_up" if up else "link_down",
+             "link": (int(u), int(v))})
 
     def replan_last(self) -> list[Placement] | None:
         out = super().replan_last()
@@ -313,7 +368,7 @@ class OnlineScheduler(RoutedScheduler):
             raise ValueError("finish() requires drain='exact'")
         comps, self.ledger = C.run_to_completion(
             self._effective_topology(), self.ledger,
-            engine=self.sim_engine)
+            engine=self.sim_engine, down=self._down_keys())
         self._sync_ledger_queues()
         if comps:
             self._now = max(self._now, max(comps.values()))
@@ -347,6 +402,8 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
                drain_queues: bool = True, finish: bool = False,
                pad_to: int | None = None,
                process_params: dict | None = None,
+               fault_schedule=None, recovery: str = "requeue",
+               max_retries: int = 3,
                **solver_opts) -> OnlineTrace:
     """Drive a scenario through an arrival stream; return the trace.
 
@@ -374,6 +431,13 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     exact ledger (if any) is served to completion into
     ``trace.completions`` and the commit log (if any) is replayed into
     ``trace.replay_completions``.
+
+    ``fault_schedule`` (a :class:`~repro.serving.faults.FaultSchedule` or
+    any iterable of :class:`~repro.serving.faults.FaultEvent`) injects
+    infrastructure events between arrivals on the same clock; ``recovery``
+    picks the policy for work caught on a failed resource (``"requeue"`` |
+    ``"migrate"`` | ``"lost"``, with at most ``max_retries`` re-placements
+    per job) — requires ``drain="exact"``.
     """
     rng = np.random.default_rng(seed)
     params = A.resolve_rate(process, rate, process_params)
@@ -382,9 +446,25 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
                             drain_queues=drain_queues, **solver_opts)
     if pad_to is None:
         pad_to = getattr(scenario, "max_layers", None)
+    injector, faults, fi = None, [], 0
+    if fault_schedule is not None:
+        from .faults import FaultInjector
+        faults = sorted(fault_schedule, key=lambda ev: ev.time)
+        injector = FaultInjector(sched, policy=recovery,
+                                 max_retries=max_retries, pad_to=pad_to)
     for t in times:
+        while fi < len(faults) and faults[fi].time <= float(t):
+            injector.apply(faults[fi])
+            fi += 1
         jobs = scenario.sample_jobs(rng, batch_size)
+        if injector is not None and sched.degraded:
+            jobs = injector.filter_arrivals(float(t), jobs)
+            if not jobs:
+                continue
         sched.submit_jobs(float(t), jobs, pad_to=pad_to)
+    while fi < len(faults) and faults[fi].time <= horizon:
+        injector.apply(faults[fi])
+        fi += 1
     if finish:
         if sched.ledger is not None:
             sched.finish()

@@ -56,7 +56,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import completions as C, jobs as J, network as N, solvers
-from repro.core.state import QueueState, Topology
+from repro.core.state import QueueState, Topology, effective_topology
 from repro.core.plan import Plan
 from repro.configs import registry
 
@@ -158,7 +158,14 @@ class RoutedScheduler:
         # *stamped* from this, never summed.
         self._now = float(np.asarray(self.state.clock))
         self._slowdown = np.ones((self.topology.num_nodes,), np.float32)
+        # Availability masks (the fault layer's state): failed nodes lose
+        # compute *and* every incident link; links can also fail alone.
+        self._avail_node = np.ones((self.topology.num_nodes,), bool)
+        self._link_up = np.ones((self.topology.num_nodes,) * 2, bool)
         self.drain_mode = drain
+        # Live registry of committed InferenceJobs (exact mode): the fault
+        # policies reconstruct residual jobs from it when a resource fails.
+        self.inflight_jobs: dict[str, J.InferenceJob] = {}
         # Exact mode: the committed-work ledger is the source of truth for
         # backlogs; the solver-visible QueueState is materialized from it.
         self.ledger: C.CommittedWork | None = (
@@ -215,13 +222,80 @@ class RoutedScheduler:
             self.commit_log = self.commit_log.record_slowdown(
                 self._now, node, self._slowdown[node])
 
+    def report_recovery(self, node: int) -> None:
+        """Straggler cleared: restore the node's effective rate to full
+        health — the inverse of :meth:`report_slowdown`, i.e. factor back
+        to 1.0.  Raises ``ValueError`` for a node outside the topology.
+        Recorded in the commit log's health history (when kept), so
+        ``replay_piecewise`` sees the recovery window instead of treating
+        the last reported slowdown as permanent.
+        """
+        if not (0 <= int(node) < self.topology.num_nodes):
+            raise ValueError(f"node {node} out of range "
+                             f"[0, {self.topology.num_nodes})")
+        self.report_slowdown(int(node), 1.0)
+
+    def _check_node(self, node: int) -> int:
+        node = int(node)
+        if not (0 <= node < self.topology.num_nodes):
+            raise ValueError(f"node {node} out of range "
+                             f"[0, {self.topology.num_nodes})")
+        return node
+
+    @property
+    def degraded(self) -> bool:
+        """Any node or link currently failed?"""
+        return not (self._avail_node.all() and self._link_up.all())
+
+    def set_node_availability(self, node: int, up: bool) -> None:
+        """Infrastructure event: the node (and implicitly every incident
+        link — a dead node cannot relay) fails or recovers from now on.
+
+        Recovery restores *full* health: the node's slowdown factor resets
+        to 1.0 (rejoining capacity is assumed re-provisioned, and a
+        recovery record of the stale factor would misstate the replay).
+        Recorded in the commit log's health history as ``factor=inf``
+        (down) / ``1.0`` (up), the encoding ``replay_piecewise`` consumes.
+        """
+        node = self._check_node(node)
+        self._avail_node[node] = bool(up)
+        if up:
+            self._slowdown[node] = 1.0
+        if self.commit_log is not None:
+            self.commit_log = self.commit_log.record_health(
+                self._now, node, 1.0 if up else np.inf)
+
+    def set_link_availability(self, u: int, v: int, up: bool) -> None:
+        """Infrastructure event on one *directed* link (u -> v); callers
+        modeling a bidirectional cut flip both directions.  Raises for a
+        link that does not exist in the base topology (mu_uv == 0) — its
+        failure could never matter, so reporting one is a caller bug.
+        """
+        u, v = self._check_node(u), self._check_node(v)
+        if float(np.asarray(self.topology.mu_link)[u, v]) <= 0:
+            raise ValueError(
+                f"link ({u}, {v}) does not exist in the topology "
+                f"(mu_link[{u}, {v}] == 0); availability events apply "
+                f"to real links only")
+        self._link_up[u, v] = bool(up)
+        if self.commit_log is not None:
+            self.commit_log = self.commit_log.record_health(
+                self._now, ("link", u, v), 1.0 if up else np.inf)
+
+    def _down_keys(self) -> tuple:
+        """Engine-facing resource keys currently failed (() when healthy)."""
+        if not self.degraded:
+            return ()
+        return C.down_keys(self.topology, self._avail_node, self._link_up)
+
     def _drain_state(self, dt: float) -> None:
         """Advance backlogs ``dt`` seconds at effective (health-aware) rates
         under the configured drain model.  Does not move the clock."""
         if self.drain_mode == "exact":
             self.ledger = C.drain_exact(self._effective_topology(),
                                         self.ledger, dt,
-                                        engine=self.sim_engine)
+                                        engine=self.sim_engine,
+                                        down=self._down_keys())
             self._sync_ledger_queues()
         else:
             self.state = self.state.advance(self._effective_topology(), dt)
@@ -281,8 +355,11 @@ class RoutedScheduler:
                                   "n_routings") if k in m}
 
     def _effective_topology(self) -> Topology:
-        import jax.numpy as jnp
-        return self.topology.scale_nodes(1.0 / jnp.asarray(self._slowdown))
+        if not self.degraded:
+            # bit-identical to the pre-fault expression (and rates)
+            return effective_topology(self.topology, self._slowdown)
+        return effective_topology(self.topology, self._slowdown,
+                                  self._avail_node, self._link_up)
 
     # -- placement ----------------------------------------------------------
     def _placements(self, plan: Plan,
@@ -301,16 +378,18 @@ class RoutedScheduler:
     _PATH_SOLVERS = ("greedy", "lazy")
 
     def _solve_and_commit(self, batch: J.JobBatch,
-                          names: list[str] | None = None) -> Plan:
+                          names: list[str] | None = None,
+                          method: str | None = None) -> Plan:
+        method = self.method if method is None else method
         topo = self._effective_topology()
         pre_state = self.state
         opts = self.solver_opts
         if ((self.ledger is not None or self.commit_log is not None)
-                and self.method in self._PATH_SOLVERS):
+                and method in self._PATH_SOLVERS):
             # The ledger charges bytes to explicit hops: have the solver
             # extract them per round instead of re-replaying per arrival.
             opts = {"extract_paths": True, **opts}
-        plan = solvers.solve(topo, batch, method=self.method,
+        plan = solvers.solve(topo, batch, method=method,
                              state=self.state, **opts)
         if plan.net is None:  # e.g. the exact solver reports no queue state
             plan = dataclasses.replace(
@@ -357,18 +436,36 @@ class RoutedScheduler:
         return plan
 
     def schedule_jobs(self, infer_jobs: list[J.InferenceJob],
-                      *, pad_to: int | None = None) -> list[Placement]:
-        """Place pre-built :class:`InferenceJob`s (the online loop's path)."""
+                      *, pad_to: int | None = None,
+                      method: str | None = None) -> list[Placement]:
+        """Place pre-built :class:`InferenceJob`s (the online loop's path).
+
+        ``method`` overrides the configured solver for this batch only —
+        the fault layer's migrate policy re-places residual jobs with the
+        ``"migrate"`` solver while regular traffic keeps the default.
+        """
         batch = J.batch_jobs(infer_jobs, pad_to=pad_to)
         pre_state = self.state
         pre_ledger, pre_log = self.ledger, self.commit_log
         plan = self._solve_and_commit(batch,
-                                      names=[j.name for j in infer_jobs])
+                                      names=[j.name for j in infer_jobs],
+                                      method=method)
         # Record only after the solve succeeds, so a raising solver can't
         # poison replan_last() with a batch that was never scheduled.
         self._last = (batch, infer_jobs, pre_state,
                       self._effective_topology(), self._now,
                       pre_ledger, pre_log)
+        if self.ledger is not None:
+            # Fault policies rebuild residual jobs from this registry;
+            # prune lazily once dead entries dominate (mirrors the
+            # engine cache's bloat rule — amortized O(1) per job).
+            for j in infer_jobs:
+                self.inflight_jobs[j.name] = j
+            if (len(self.inflight_jobs) >= 2048
+                    and len(self.inflight_jobs) > 2 * len(self.ledger.jobs)):
+                live = {j.name for j in self.ledger.jobs}
+                self.inflight_jobs = {n: j for n, j in
+                                      self.inflight_jobs.items() if n in live}
         return self._placements(plan, infer_jobs)
 
     def schedule(self, requests: list[Request]) -> list[Placement]:

@@ -213,6 +213,13 @@ class StreamTrace(OnlineTrace):
             "shed": len(self.shed),
             "sustained_arr_s": self.sustained_arr_s(),
         })
+        if self.shed:
+            by_reason: dict[str, int] = {}
+            for rec in self.shed:
+                # pre-fault records carry no reason: they are backpressure
+                why = rec.get("reason", "backpressure")
+                by_reason[why] = by_reason.get(why, 0) + 1
+            out["shed_by_reason"] = by_reason
         if self.requests:
             for key, arr in (("wait", self.waits), ("solve", self.solves),
                              ("service", self.services)):
@@ -246,12 +253,13 @@ class _Window:
     close_s: float = 0.0
 
 
-# Event ordering at equal simulated instants: a commit frees buffer
-# capacity (and admits deferred work) before a window-deadline flush fires,
-# and both precede any new arrival at the same instant — so deferred
-# requests are always re-admitted ahead of later traffic and FIFO order is
-# preserved.
-_COMMIT, _FLUSH, _ARRIVAL = 0, 1, 2
+# Event ordering at equal simulated instants: an infrastructure fault
+# applies first (commits at the same instant already see the post-event
+# topology), then a commit frees buffer capacity (and admits deferred
+# work) before a window-deadline flush fires, and both precede any new
+# arrival at the same instant — so deferred requests are always
+# re-admitted ahead of later traffic and FIFO order is preserved.
+_FAULT, _COMMIT, _FLUSH, _ARRIVAL = -1, 0, 1, 2
 
 
 class StreamingPipeline:
@@ -297,14 +305,23 @@ class StreamingPipeline:
     # -- the event loop ------------------------------------------------------
     def run(self, stream: Iterable[tuple[float, Sequence[J.InferenceJob]]],
             *, horizon: float | None = None,
-            pad_to: int | None = None) -> StreamTrace:
+            pad_to: int | None = None,
+            fault_schedule=None, recovery: str = "requeue",
+            max_retries: int = 3) -> StreamTrace:
         """Drive ``(t, jobs)`` epochs (nondecreasing ``t``) to completion.
 
         ``horizon`` clamps the last partial window's flush (a window opened
         near the end of the stream flushes at ``min(open + window_s,
         horizon)`` rather than waiting out the full δ).  Every admitted
         request is committed before returning; shed requests are recorded
-        in ``trace.shed``.
+        in ``trace.shed`` with a ``reason``.
+
+        ``fault_schedule`` (any iterable of
+        :class:`~repro.serving.faults.FaultEvent`) pushes infrastructure
+        events into the same event heap; they apply *before* any commit at
+        the same instant and strand/recover work per ``recovery`` (see
+        :class:`~repro.serving.faults.FaultInjector`) — requires
+        ``drain="exact"``.
         """
         self._pad_to = pad_to
         self._horizon = horizon
@@ -321,6 +338,15 @@ class StreamingPipeline:
             collections.deque())
         self._pending = 0
         self._last_t = -np.inf
+        self._injector = None
+        if fault_schedule is not None:
+            from .faults import FaultInjector
+            self._injector = FaultInjector(self.sched, policy=recovery,
+                                           max_retries=max_retries,
+                                           pad_to=pad_to)
+            for ev in fault_schedule:
+                if horizon is None or ev.time <= horizon:
+                    self._push(ev.time, _FAULT, ev)
 
         self._pull_arrival()
         while self._events:
@@ -332,6 +358,8 @@ class StreamingPipeline:
             elif kind == _FLUSH:
                 if payload == self._wid and self._window:
                     self._close_window(t)
+            elif kind == _FAULT:
+                self._injector.apply(payload)
             else:  # _COMMIT
                 self._commit(t, *payload)
         assert self._pending == 0 and not self._spill and not self._window
@@ -356,7 +384,8 @@ class StreamingPipeline:
         cfg = self.config
         if cfg.max_pending is not None and self._pending >= cfg.max_pending:
             if cfg.policy == "shed":
-                self.trace.shed.append({"time": t, "name": job.name})
+                self.trace.shed.append({"time": t, "name": job.name,
+                                        "reason": "backpressure"})
             else:
                 self._spill.append((t, job))
                 self.trace.deferred += 1
@@ -398,11 +427,34 @@ class StreamingPipeline:
 
     # -- solver commit stage -------------------------------------------------
     def _commit(self, t: float, w: _Window, d: float) -> None:
+        if self._injector is not None and self.sched.degraded:
+            # Commit-time routability: the topology may have degraded since
+            # these requests were admitted; a request whose endpoints are
+            # dead or partitioned now has no serveable plan.
+            live = [a for a in w.jobs
+                    if self._injector.routable(int(a.job.src),
+                                               int(a.job.dst))]
+            for a in w.jobs:
+                if a not in live:
+                    self.trace.shed.append(
+                        {"time": t, "name": a.job.name,
+                         "reason": "unroutable"})
+                    self._pending -= 1
+            w.jobs = live
+        if not w.jobs:
+            self._finish_window(t, w, d, wall=0.0)
+            return
         jobs = [a.job for a in w.jobs]
         arrivals = [a.arrival_s for a in w.jobs]
-        placements = self.sched.submit_window(
-            t, jobs, arrivals=arrivals, pad_to=self._pad_to,
-            solve_mode=self.config.solve_mode)
+        placements = self._solve_window(t, jobs, arrivals)
+        if placements is None:        # solver died twice: shed the window
+            for a in w.jobs:
+                self.trace.shed.append({"time": t, "name": a.job.name,
+                                        "reason": "solver_error"})
+                self._pending -= 1
+            w.jobs = []
+            self._finish_window(t, w, d, wall=self.sched.last_solve_s)
+            return
         wall = self.sched.last_solve_s
         self._observe_solve(wall)
         bound = {p.job_name: p.bound_s for p in placements}
@@ -411,10 +463,46 @@ class StreamingPipeline:
                 name=a.job.name, window=w.index, arrival_s=a.arrival_s,
                 admit_s=a.admit_s, close_s=w.close_s, commit_s=t,
                 solve_s=d, service_s=bound[a.job.name]))
+        self._pending -= len(w.jobs)
+        self._finish_window(t, w, d, wall=wall)
+
+    def _solve_window(self, t: float, jobs, arrivals):
+        """One window's solve with the robustness contract: a solver
+        exception must not kill the pipeline.  A clean failure (nothing
+        committed) is retried once; a *partial* failure (sequential mode
+        committed a prefix before the raise) is rolled back through the
+        ledger's withdrawal machinery — the raise happened at the commit
+        instant, so zero served work is discarded — and not retried
+        (committed names are unique for the ledger's lifetime, so the same
+        requests cannot be resubmitted).  Returns ``None`` when the window
+        commits nothing; the caller sheds it with ``reason:
+        "solver_error"``."""
+        sched = self.sched
+        for attempt in (0, 1):
+            pre = (sched.ledger.names_seen if sched.ledger is not None
+                   else frozenset())
+            try:
+                return sched.submit_window(
+                    t, jobs, arrivals=arrivals, pad_to=self._pad_to,
+                    solve_mode=self.config.solve_mode)
+            except Exception:  # noqa: BLE001 — serving must survive
+                landed = (sorted(sched.ledger.names_seen - pre)
+                          if sched.ledger is not None else [])
+                if landed:
+                    sched.ledger = sched.ledger.remove_jobs(landed, at=t)
+                    if sched.commit_log is not None:
+                        sched.commit_log = sched.commit_log.record_removal(
+                            t, landed)
+                    sched._sync_ledger_queues()
+                    sched._last = None
+                    return None
+        return None
+
+    def _finish_window(self, t: float, w: _Window, d: float,
+                       *, wall: float) -> None:
         self.trace.windows.append(WindowRecord(
             index=w.index, open_s=w.open_s, close_s=w.close_s, commit_s=t,
             size=len(w.jobs), solve_model_s=d, solve_wall_s=wall))
-        self._pending -= len(w.jobs)
         self._busy = False
         # Commits free buffer capacity: re-admit deferred arrivals FIFO —
         # before any later traffic — so backpressure never reorders them.
@@ -435,6 +523,8 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
                method: str = "greedy", drain_queues: bool = True,
                finish: bool = False, pad_to: int | None = None,
                process_params: dict | None = None,
+               fault_schedule=None, recovery: str = "requeue",
+               max_retries: int = 3,
                **solver_opts) -> StreamTrace:
     """Drive a scenario through the streaming pipeline; return the trace.
 
@@ -449,7 +539,9 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
     :class:`OnlineScheduler` unchanged (``drain="fluid" | "exact"``,
     ``track_commits=``, ...).  ``finish=True`` runs the same end-of-run
     accounting as the serial loop (exact ledger served to completion,
-    commit log replayed).
+    commit log replayed).  ``fault_schedule``/``recovery``/``max_retries``
+    inject infrastructure events into the pipeline's event heap (see
+    :meth:`StreamingPipeline.run`) — requires ``drain="exact"``.
     """
     rng = np.random.default_rng(seed)
     params = A.resolve_rate(process, rate, process_params)
@@ -468,7 +560,9 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
     else:
         stream = ((float(t), scenario.sample_jobs(rng, batch_size))
                   for t in times)
-    pipe.run(stream, horizon=horizon, pad_to=pad_to)
+    pipe.run(stream, horizon=horizon, pad_to=pad_to,
+             fault_schedule=fault_schedule, recovery=recovery,
+             max_retries=max_retries)
     if finish:
         if sched.ledger is not None:
             sched.finish()
