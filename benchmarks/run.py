@@ -35,7 +35,7 @@ def main() -> None:
 
     from . import bound_gap, drain_bench, fault_bench, fig5_small, \
         fig_large, kernel_bench, online_bench, roofline, \
-        runtime_scaling, solver_compare, stream_bench
+        runtime_scaling, solver_compare, solver_fused_bench, stream_bench
 
     def _solver_ratio(rows):
         by = {r["method"]: r for r in rows}
@@ -45,6 +45,11 @@ def main() -> None:
 
     bench("solvers", solver_compare.run,
           lambda r: _solver_ratio(r) if r else "n/a")
+    bench("solver_fused",
+          lambda: solver_fused_bench.run(smoke=True, verbose=False),
+          lambda r: (f"match={r['fused_matches_ref']},"
+                     f"e2e={r['end_to_end']['speedup']:.2f}x")
+          if r else "n/a")
     bench("online", lambda: online_bench.run(smoke=True),
           lambda r: (f"bounded={all(x['drain_bounded'] for x in r)},"
                      f"diverges={all(x['nodrain_diverges'] for x in r)}")

@@ -16,9 +16,12 @@ generous shows up as a p99 regression, not as a free lunch.
 ``BENCH_stream.json`` records, per scenario:
 
   * ``serial``  — the per-arrival baseline (wall arr/s, p50/p99, backlog),
-  * ``grid``    — one row per (δ, B, solve_mode): wall arr/s, ``speedup``
-    vs serial, ``p99_ratio`` (simulated p99 vs serial), sustained sim
-    throughput, mean window occupancy, deferral/shed counts,
+  * ``grid``    — one row per (δ, B, solve_mode[, fuse_windows]): wall
+    arr/s, ``speedup`` vs serial, ``p99_ratio`` (simulated p99 vs
+    serial), sustained sim throughput, mean window occupancy,
+    deferral/shed counts.  Rows with ``fuse_windows > 1`` drain that
+    many queued windows per solver start as one fused multi-window
+    dispatch (cross-arrival batching),
   * ``best_at_equal_p99`` — the fastest grid row whose p99 is within
     ``P99_EQUAL_TOL`` of serial; ``faster_at_equal_p99`` is the headline
     claim: the pipeline sustains strictly higher wall arr/s than the
@@ -76,15 +79,21 @@ sys.path.insert(0, str(_ROOT / "src"))
 # ``solve_mode="sequential"``: width-1 solves inside one scheduler entry —
 # serial plans, amortized drain-sync/accounting — with one batched row
 # kept to chart the contrast.
+# A 4th grid element, when present, is ``fuse_windows``: with the batched
+# solve mode, up to that many queued windows drain per solver start as ONE
+# fused multi-window dispatch (``solve_fused``) — cross-arrival batching on
+# top of within-window batching.  Fused rows only make sense for
+# ``"batched"`` mode (sequential keeps the one-window-per-start contract).
 SMOKE_CASES = [
     dict(name="star", arrivals=24, load=0.6, drain="fluid", burst=4,
-         grid=[(0.05, 4, "batched")]),
+         grid=[(0.05, 4, "batched"), (0.05, 4, "batched", 2)]),
     dict(name="paper-small", arrivals=24, load=0.6, drain="fluid", burst=4,
          grid=[(0.05, 4, "batched")]),
 ]
 _SMALL_GRID = [(0.05, 2, "batched"), (0.05, 4, "batched"),
                (0.05, 8, "batched"), (0.2, 4, "batched"),
-               (1.0, 4, "batched")]
+               (1.0, 4, "batched"), (0.05, 4, "batched", 2),
+               (0.05, 4, "batched", 4)]
 FULL_CASES = [
     dict(name="star", arrivals=40, load=0.6, drain="fluid", burst=4,
          grid=_SMALL_GRID),
@@ -95,7 +104,8 @@ FULL_CASES = [
     dict(name="us-backbone:lm", arrivals=320, load=1.5, drain="exact",
          burst=8, repeat=3,
          grid=[(0.05, 4, "sequential"), (0.05, 8, "sequential"),
-               (0.2, 8, "sequential"), (0.05, 8, "batched")]),
+               (0.2, 8, "sequential"), (0.05, 8, "batched"),
+               (0.05, 8, "batched", 4)]),
 ]
 
 P99_EQUAL_TOL = 0.05        # "equal p99": within 5% of the serial loop
@@ -107,6 +117,7 @@ EQUIV_ARRIVALS = 12
 def _drive(name: str, *, arrivals: int, load: float, drain: str,
            seed: int, burst: int = 4, window_s: float = 0.0,
            max_batch: int = 1, solve_mode: str = "batched",
+           fuse_windows: int = 1,
            solver_latency: float | str = "measured") -> tuple:
     """One full streaming session on a fresh scenario; returns (trace, wall)."""
     from repro.scenarios import make_scenario
@@ -122,7 +133,8 @@ def _drive(name: str, *, arrivals: int, load: float, drain: str,
                     process="bursty", rate=rate, drain=drain,
                     process_params={"burst_size": burst},
                     window_s=window_s, max_batch=max_batch,
-                    solve_mode=solve_mode, solver_latency=solver_latency)
+                    solve_mode=solve_mode, fuse_windows=fuse_windows,
+                    solver_latency=solver_latency)
     return tr, time.time() - t0
 
 
@@ -190,21 +202,25 @@ def _bench_case(case: dict, *, seed: int, repeat: int,
     tr, wall = _timed(repeat, **base)
     serial = _row(tr, wall)
     rows = []
-    for dmult, B, mode in case["grid"]:
+    for entry in case["grid"]:
+        dmult, B, mode = entry[:3]
+        fuse = entry[3] if len(entry) > 3 else 1
         tr, wall = _timed(repeat, window_s=dmult / rate, max_batch=B,
-                          solve_mode=mode, **base)
+                          solve_mode=mode, fuse_windows=fuse, **base)
         r = _row(tr, wall)
         r.update({
             "window_s": dmult / rate,
             "window_gaps": dmult,
             "max_batch": B,
             "solve_mode": mode,
+            "fuse_windows": fuse,
             "speedup": r["arr_per_s_wall"] / serial["arr_per_s_wall"],
             "p99_ratio": r["p99_latency_s"] / serial["p99_latency_s"],
         })
         rows.append(r)
         if verbose:
-            print(f"  δ={dmult:4.2f}/rate B={B} {mode[:3]}: "
+            print(f"  δ={dmult:4.2f}/rate B={B} {mode[:3]}"
+                  f"{f' f={fuse}' if fuse > 1 else '':5s}: "
                   f"{r['arr_per_s_wall']:7.1f} arr/s "
                   f"({r['speedup']:5.2f}x)  p99 {r['p99_latency_s']:8.3f}s "
                   f"(x{r['p99_ratio']:.3f})  win={r['windows']:3d} "

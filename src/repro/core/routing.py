@@ -48,11 +48,15 @@ class Route:
     assign: jax.Array      # [Lmax] int32: compute node of each (real) layer
 
 
-def _dp(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
-        num_layers: jax.Array, cinv: jax.Array, nw: jax.Array) -> Route:
-    """Run the layer DP given the per-layer transfer closures ``t``.
+def _dp_fwd(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
+            num_layers: jax.Array, cinv: jax.Array, nw: jax.Array):
+    """Forward half of the layer DP: cost + the backpointer tables.
 
-    t: [Lmax+1, V, V]; comp: [Lmax]; cinv/nw: [V].
+    t: [Lmax+1, V, V]; comp: [Lmax]; cinv/nw: [V].  Returns
+    ``(cost, total [V], bps [Lmax, V])`` — everything vectorized; the
+    sequential per-job backpointer walk lives in :func:`_dp_back` so
+    callers that only need the winning job's assignment (the fused greedy
+    round: J forward DPs, ONE committed job) can skip J-1 walks.
     """
     lmax = comp.shape[0]
     g0 = t[0, src, :] + nw
@@ -75,16 +79,35 @@ def _dp(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
     g_final, bps = jax.lax.scan(step, g0, (layer_ids, comp, t[:-1]))
     t_last = jnp.take(t, num_layers, axis=0)                  # [V, V]
     total = g_final + t_last[:, dst]
-    cost = jnp.min(total)
+    return jnp.minimum(jnp.min(total), INF), total, bps
+
+
+def _dp_back(total: jax.Array, bps: jax.Array) -> jax.Array:
+    """Walk backpointers Lmax..1 to recover the compute node of each layer.
+
+    Integer gathers only — bit-identity with the full DP's assignment is
+    structural, not a float-rounding question (which also makes the
+    ``unroll`` safe: there is no float mul-add for LLVM to re-contract,
+    so the unrolled loop is the same gather chain with less XLA:CPU
+    loop machinery)."""
     u_star = jnp.argmin(total).astype(jnp.int32)
 
-    # Walk backpointers Lmax..1 to recover the compute node of each layer.
     def back(cur, bp_l):
         prev = jnp.where(bp_l[cur] < 0, cur, bp_l[cur])
         return prev, cur
 
-    _, assign_rev = jax.lax.scan(back, u_star, bps, reverse=True)
-    return Route(cost=jnp.minimum(cost, INF), assign=assign_rev)
+    _, assign_rev = jax.lax.scan(back, u_star, bps, reverse=True, unroll=8)
+    return assign_rev
+
+
+def _dp(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
+        num_layers: jax.Array, cinv: jax.Array, nw: jax.Array) -> Route:
+    """Run the layer DP given the per-layer transfer closures ``t``.
+
+    t: [Lmax+1, V, V]; comp: [Lmax]; cinv/nw: [V].
+    """
+    cost, total, bps = _dp_fwd(t, comp, src, dst, num_layers, cinv, nw)
+    return Route(cost=cost, assign=_dp_back(total, bps))
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -117,6 +140,28 @@ def route_batch(net: ComputeNetwork, batch: JobBatch,
         net, c, d, s, t_, n, closures=cl, use_pallas=use_pallas)
     return jax.vmap(fn)(batch.comp, batch.data, batch.src, batch.dst,
                         batch.num_layers, closures)
+
+
+def route_batch_fwd(net: ComputeNetwork, batch: JobBatch,
+                    *, closures: Closures):
+    """Forward-only :func:`route_batch`: costs + backpointer tables.
+
+    Returns ``(cost [J], total [J, V], bps [J, Lmax, V])``.  The per-job
+    backpointer *walk* (a sequential chain of scalar gathers — the only
+    non-vectorizable piece of the DP) is deferred to
+    :func:`assign_from_backpointers`, so a caller that commits a single
+    job per round recovers exactly one assignment instead of J.
+    """
+    cinv, nw = node_invrate(net), node_wait(net)
+    return jax.vmap(
+        lambda c, s, t_, n, cl: _dp_fwd(cl.t, c, s, t_, n, cinv, nw)
+    )(batch.comp, batch.src, batch.dst, batch.num_layers, closures)
+
+
+def assign_from_backpointers(total: jax.Array, bps: jax.Array) -> jax.Array:
+    """One job's [Lmax] assignment from its :func:`route_batch_fwd` row —
+    bit-identical to the corresponding ``route_batch(...).assign`` row."""
+    return _dp_back(total, bps)
 
 
 @jax.jit
@@ -155,17 +200,17 @@ def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
     return jnp.minimum(total + t_last[last, dst], INF)
 
 
-@jax.jit
-def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
-                      src: jax.Array, dst: jax.Array, num_layers: jax.Array,
-                      assign: jax.Array,
-                      *, closures: Closures | None = None) -> ComputeNetwork:
-    """Algorithm 1 line 3: add the routed job's load to the queues.
+def _commit_impl(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                 src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                 assign: jax.Array, closures: Closures | None,
+                 ) -> tuple[ComputeNetwork, jax.Array]:
+    """Shared commit body; also returns the per-layer hop lists it charged.
 
-    q_node[a_l] += c_l for each real layer l; q_link[u, v] += d_l for every
-    hop of the min-cost path carrying layer-l output (l = 0..L, with node_0 =
-    src and node_{L+1} = dst).  Pass ``closures`` to reuse the caller's
-    (w, t) stack instead of recomputing both here.
+    The hops come out of the *same* ``reconstruct_path`` calls inside the
+    same per-layer scan that charges q_link, so emitting them changes no
+    arithmetic — :func:`commit_assignment` discards them,
+    :func:`commit_with_hops` hands them to callers that want
+    ``plan.paths`` without a second extraction pass.
     """
     v = net.num_nodes
     if closures is None:
@@ -188,19 +233,82 @@ def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
     q_node = q_node + jnp.zeros_like(q_node).at[assign].add(
         jnp.where(jnp.arange(lmax) < num_layers, comp, 0.0))
 
+    # Reconstruct all L+1 layer paths in one vmapped walk (the per-layer
+    # walks are independent given (w, t)); the q_link charges then replay
+    # layer-by-layer in the same scan order as before, so the accumulated
+    # floats are bitwise identical to the per-layer sequential version.
+    hops = jax.vmap(
+        lambda wl, tl, a, bb: reconstruct_path(wl, tl, a, bb, max_hops=v)
+    )(w, t, starts, ends)                       # [Lmax+1, V, 2]
+
     def add_layer(ql, xs):
-        l, a, b = xs
+        l, hops_l = xs
         active = l <= num_layers
         d_l = data[l]
-        hops = reconstruct_path(w[l], t[l], a, b, max_hops=v)
-        us, vs = hops[:, 0], hops[:, 1]
+        us, vs = hops_l[:, 0], hops_l[:, 1]
         valid = (us >= 0) & active & (us != vs)
         add = jnp.where(valid, d_l, 0.0)
         ql = ql.at[jnp.maximum(us, 0), jnp.maximum(vs, 0)].add(add)
         return ql, None
 
-    q_link, _ = jax.lax.scan(add_layer, net.q_link, (for_l, starts, ends))
-    return net.with_queues(q_node, q_link)
+    # unroll=4: tiny per-layer bodies, same sequential charge order (and
+    # therefore bitwise-identical accumulation) with less loop overhead.
+    q_link, _ = jax.lax.scan(add_layer, net.q_link, (for_l, hops), unroll=4)
+    return net.with_queues(q_node, q_link), hops
+
+
+@jax.jit
+def commit_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                      src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                      assign: jax.Array,
+                      *, closures: Closures | None = None) -> ComputeNetwork:
+    """Algorithm 1 line 3: add the routed job's load to the queues.
+
+    q_node[a_l] += c_l for each real layer l; q_link[u, v] += d_l for every
+    hop of the min-cost path carrying layer-l output (l = 0..L, with node_0 =
+    src and node_{L+1} = dst).  Pass ``closures`` to reuse the caller's
+    (w, t) stack instead of recomputing both here.
+    """
+    net2, _ = _commit_impl(net, comp, data, src, dst, num_layers, assign,
+                           closures)
+    return net2
+
+
+def commit_with_hops(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
+                     src: jax.Array, dst: jax.Array, num_layers: jax.Array,
+                     assign: jax.Array,
+                     *, closures: Closures | None = None,
+                     ) -> tuple[ComputeNetwork, jax.Array]:
+    """:func:`commit_assignment` that also returns its hop lists.
+
+    ``hops`` is [Lmax+1, V, 2] int32 — for each layer the explicit (u, v)
+    transfer hops the commit charged, padded with (-1, -1); exactly the
+    rows :func:`reconstruct_path` walks, so formatting them with
+    :func:`hops_to_paths` reproduces :func:`extract_paths` without a
+    second reconstruction.  Not jitted here: the fused solver traces it
+    inside its own program (jitting at this level would just add a
+    dispatch for eager callers, who should prefer ``commit_assignment``).
+    """
+    return _commit_impl(net, comp, data, src, dst, num_layers, assign,
+                        closures)
+
+
+def hops_to_paths(hops, num_layers: int) -> list:
+    """Format a concrete [Lmax+1, V, 2] hop tensor as ``plan.paths`` lists.
+
+    Matches :func:`extract_paths` output exactly: one list of (u, v) int
+    tuples per real layer 0..num_layers, truncated at the first (-1, -1)
+    padding row.  One vectorized hop count, then ``tolist`` on the sliced
+    *real* hops only — real paths are a few hops while the buffer holds V
+    rows of mostly (-1, -1) padding, and the fused solver formats every
+    layer of every round through here, so converting the padding to
+    Python ints was a measurable slice of its path post-pass.
+    """
+    import numpy as np
+    live = np.asarray(hops)[:int(num_layers) + 1]
+    n_real = (live[:, :, 0] >= 0).sum(1).tolist()
+    return [list(map(tuple, live[l, :n].tolist()))
+            for l, n in enumerate(n_real)]
 
 
 @functools.partial(jax.jit, static_argnames=("max_hops",))

@@ -81,8 +81,17 @@ def layer_edge_weights(net: ComputeNetwork, data_sizes: jax.Array) -> jax.Array:
     Absent edges get INF; the diagonal is 0 (staying put is free).
     """
     inv = link_invrate(net)  # [V, V], INF off-graph, 0 diag
-    wait = link_wait(net)    # [V, V], 0 diag
-    w = data_sizes[..., :, None, None] * inv + wait
+    # Computed in the paper's literal form (d_l + Q_uv) / mu_uv rather than
+    # d_l/mu + Q/mu: the multiply is the LAST rounding, so there is no
+    # mul-feeding-add for LLVM to contract into an FMA.  The split form is
+    # contraction-unstable — whether XLA/LLVM fuses ``d*inv + wait`` into
+    # an FMA depends on the surrounding program, so the fused round scan,
+    # the standalone closure build, and eager execution each rounded the
+    # last ulp differently once queues were nonzero, breaking bitwise
+    # solver parity (lax.optimization_barrier does not stop the
+    # contraction on CPU).  At Q == 0 this form reproduces ``d * inv``
+    # bit-for-bit, so pre-change golden traces are unaffected.
+    w = (data_sizes[..., :, None, None] + net.q_link) * inv
     return jnp.minimum(w, INF)
 
 
@@ -110,6 +119,57 @@ def dedupe_data(batch) -> tuple[jax.Array, jax.Array]:
     data = np.asarray(jax.device_get(batch.data))
     uniq, inv = np.unique(data, axis=0, return_inverse=True)
     return jnp.asarray(uniq), jnp.asarray(inv.reshape(-1), jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DedupePlan:
+    """Host-precomputed dedupe structure for one job batch.
+
+    Row level: ``uniq [U, Lmax+1]`` unique data rows with ``inv [J]``
+    mapping jobs back (exactly :func:`dedupe_data`).  Scalar level:
+    ``w_l(u, v) = d_l * inv_rate(u, v) + wait(u, v)`` depends on the data
+    size *scalar* d_l only, so two (row, layer) slots sharing a d value
+    have bitwise-identical weight matrices — and hence bitwise-identical
+    closures — under **every** queue state.  ``d_vals [D]`` are the unique
+    scalars and ``d_idx [U, Lmax+1]`` gathers them back; the fused solver
+    closes [D, V, V] matrices per round instead of [U, Lmax+1, V, V]
+    (model-serving batches share layer widths, so D is typically an order
+    of magnitude below U * (Lmax+1)).  Queue-state independent, so solvers
+    hoist one plan out of the round loop.
+    """
+
+    uniq: jax.Array    # [U, Lmax+1] unique data rows
+    inv: jax.Array     # [J] int32: job -> row in uniq
+    d_vals: jax.Array  # [D] unique data-size scalars
+    d_idx: jax.Array   # [U, Lmax+1] int32: (row, layer) -> slot in d_vals
+
+
+def dedupe_plan(batch) -> DedupePlan:
+    """Build the two-level :class:`DedupePlan` for a job batch (host-level)."""
+    uniq, inv = dedupe_data(batch)
+    uniq_h = np.asarray(uniq)
+    d_vals, d_idx = np.unique(uniq_h, return_inverse=True)
+    return DedupePlan(
+        uniq=uniq, inv=inv, d_vals=jnp.asarray(d_vals),
+        d_idx=jnp.asarray(d_idx.reshape(uniq_h.shape), jnp.int32))
+
+
+def closures_for_dedup(net: ComputeNetwork, plan: DedupePlan,
+                       *, use_pallas: bool | None = None) -> Closures:
+    """Uncounted batch-stacked closure build through a :class:`DedupePlan`.
+
+    jit/scan-safe (the fused solver's round body calls it with traced
+    queues).  Closes the [D, V, V] unique-scalar stack and gathers back to
+    [J, Lmax+1, V, V]; the closure of each weight matrix is computed
+    independently, so the gathered stack is bitwise identical to
+    ``build_closures_batch``'s.  ``w`` is dropped as usual (cheap to
+    recompute per job).
+    """
+    t_d = ops.minplus_closure(layer_edge_weights(net, plan.d_vals),
+                              use_pallas=use_pallas)      # [D, V, V]
+    t_u = t_d[plan.d_idx]                                 # [U, Lmax+1, V, V]
+    return Closures(w=None, t=t_u[plan.inv])              # [J, ...]
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -154,21 +214,31 @@ def reconstruct_path(w: jax.Array, t: jax.Array, src: jax.Array, dst: jax.Array,
 
     Returns hops [max_hops, 2] int32 (u, v) pairs, padded with (-1, -1) once
     dst is reached. jit/vmap friendly (fixed max_hops).
+
+    A fixed-length ``scan`` with ``unroll=4``: the fused solver walks every
+    layer of every round on device (plus a [P, Lmax+1] batched post-pass for
+    ``plan.paths``), so per-step loop overhead — not the few-hop arithmetic —
+    is the cost, and unrolling beats both the plain scan and a
+    ``while_loop`` early exit (whose batched ``cond`` pays its own
+    per-iteration carry).  Unrolling is contraction-safe here: the body is
+    gathers, adds, and an argmin — no multiply feeding an add, so there is
+    no FMA for LLVM to contract differently across unroll factors.
+    Post-arrival steps emit exactly the (-1, -1) padding, so the output is
+    bit-identical regardless of loop form.
     """
 
-    def body(carry, _):
-        cur, done = carry
+    def step(state, _):
+        cur, done = state
         # next hop minimizing edge + remaining distance; exclude the zero-cost
         # self-loop (diagonal) so ties never stall the walk
         cand = (w[cur] + t[:, dst]).at[cur].set(INF)
         nxt = jnp.argmin(cand).astype(jnp.int32)
         arrived = cur == dst
-        hop = jnp.where(done | arrived, -1, 1)
-        u = jnp.where(hop < 0, -1, cur)
-        v = jnp.where(hop < 0, -1, nxt)
-        new_cur = jnp.where(done | arrived, cur, nxt)
-        return (new_cur, done | arrived), jnp.stack([u, v])
+        dead = done | arrived
+        hop = jnp.stack([jnp.where(dead, -1, cur), jnp.where(dead, -1, nxt)])
+        return (jnp.where(dead, cur, nxt), dead), hop
 
     (_, _), hops = jax.lax.scan(
-        body, (src.astype(jnp.int32), jnp.asarray(False)), None, length=max_hops)
+        step, (src.astype(jnp.int32), jnp.asarray(False)),
+        None, length=max_hops, unroll=4)
     return hops

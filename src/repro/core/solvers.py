@@ -15,7 +15,10 @@ search, LP rounding, multi-objective) is a drop-in registration:
 
     plan = solvers.solve(net, batch, method="beam", width=16)
 
-Built-in methods: ``greedy``, ``lazy``, ``sa``, ``exact``.
+Built-in methods: ``greedy`` (fused single-dispatch), ``greedy_ref`` (the
+host-driven round loop the fused solver is parity-gated against), ``lazy``,
+``sa``, ``exact``.  :func:`solve_fused` is the cross-arrival entry: several
+queued arrival windows solved in one padded multi-window dispatch.
 """
 from __future__ import annotations
 
@@ -101,12 +104,55 @@ def solve(net: ComputeNetwork | Topology, batch: JobBatch,
     return dataclasses.replace(plan, meta=meta)
 
 
+def solve_fused(net: ComputeNetwork | Topology, batches: list[JobBatch],
+                *, state: QueueState | None = None, pad_to: int | None = None,
+                **opts) -> list[Plan]:
+    """Solve several queued arrival windows in **one** fused dispatch.
+
+    ``batches`` are solved in order, each against the previous window's
+    committed queues — bit-identical to sequential ``solve(method="greedy")``
+    calls threading the state by hand, but the whole chain is one padded
+    multi-window device program (``greedy.greedy_route_windows``).  All
+    windows must share a padded layer width; ``pad_to`` asserts it (callers
+    that built their batches with ``batch_jobs(pad_to=...)`` pass the same
+    value).  Returns one Plan per window; each plan's ``net`` carries that
+    window's post-commit queue state and its ``meta`` the shared-dispatch
+    accounting (``solve_s`` is the whole call's wall; ``solve_share_s`` the
+    per-window share).
+    """
+    from . import greedy
+    if isinstance(net, Topology):
+        net = net.view(state)
+    elif state is not None:
+        raise ValueError("state= is only meaningful with a Topology first arg")
+    if pad_to is not None:
+        bad = [b.max_layers for b in batches if b.max_layers != pad_to]
+        if bad:
+            raise ValueError(f"every window must be padded to pad_to="
+                             f"{pad_to}; got layer widths {bad}")
+    n0 = closure_build_count()
+    t0 = time.perf_counter()
+    plans = greedy.greedy_route_windows(net, batches, **opts)
+    wall = time.perf_counter() - t0
+    builds = closure_build_count() - n0
+    return [dataclasses.replace(p, meta={
+        "method": "greedy", **p.meta, "solve_s": wall,
+        "solve_share_s": wall / max(len(plans), 1),
+        "closure_builds": builds}) for p in plans]
+
+
 # -- built-ins --------------------------------------------------------------
 
 @register("greedy")
 def _solve_greedy(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
     from . import greedy
     return greedy.greedy_route(net, batch, **opts)
+
+
+@register("greedy_ref")
+def _solve_greedy_ref(net: ComputeNetwork, batch: JobBatch, **opts) -> Plan:
+    from . import greedy
+    return greedy.greedy_route_ref(net, batch, **opts)
 
 
 @register("lazy")

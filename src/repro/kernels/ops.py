@@ -34,7 +34,19 @@ _DISPATCH_COUNTS: collections.Counter = collections.Counter()
 
 def dispatch_counts() -> dict[str, int]:
     """Copy of the {path: times-traced} tally ("oracle" | "pallas_2d" |
-    "pallas_batched")."""
+    "pallas_batched").
+
+    These counters fire at **trace time**, not execution time: a jitted
+    caller records each kernel choice once per compiled signature, then
+    every cached re-execution runs the chosen kernel without touching the
+    tally.  The distinction matters most for the fused greedy solver —
+    its whole round loop (J rounds x closure squarings per round) is one
+    device program, so a solve that *executes* hundreds of min-plus
+    kernels adds at most a handful of entries here (and a warmed shape
+    adds zero).  Per-solve execution telemetry lives in the solver's
+    plan meta instead: ``meta["dispatches"]`` / ``meta["rounds_per_
+    dispatch"]`` count what the device actually ran.
+    """
     return dict(_DISPATCH_COUNTS)
 
 

@@ -284,6 +284,74 @@ class OnlineScheduler(RoutedScheduler):
         ))
         return placements
 
+    def submit_windows(self, t: float,
+                       windows: Sequence[Sequence[J.InferenceJob]],
+                       *, arrivals: Sequence[Sequence[float]] | None = None,
+                       pad_to: int | None = None,
+                       method: str | None = None) -> list[list[Placement]]:
+        """Cross-arrival fused submission: W queued windows, one dispatch.
+
+        All windows commit at instant ``t`` (one drain sync), solved in
+        order against each other's committed queues by
+        :meth:`RoutedScheduler.schedule_windows` — the same plans W
+        back-to-back :meth:`submit_window` calls at ``t`` would commit,
+        in a single fused device program.  One :class:`ArrivalRecord` per
+        window keeps the trace shape identical to the sequential path
+        (per-window ``solve_s`` is the shared dispatch's per-window
+        share); ``arrivals`` aligns per-window arrival instants exactly
+        as in :meth:`submit_window`.
+        """
+        windows = [list(w) for w in windows]
+        if arrivals is not None and len(arrivals) != len(windows):
+            raise ValueError(f"arrivals ({len(arrivals)}) must align with "
+                             f"windows ({len(windows)})")
+        waits: list[dict[str, float] | None] = [None] * len(windows)
+        if arrivals is not None:
+            for w, (jobs, arrs) in enumerate(zip(windows, arrivals)):
+                if len(arrs) != len(jobs):
+                    raise ValueError(
+                        f"window {w}: arrivals ({len(arrs)}) must align "
+                        f"with jobs ({len(jobs)})")
+                names = [j.name for j in jobs]
+                if len(set(names)) != len(names):
+                    raise ValueError("window job names must be unique")
+                waits[w] = {j.name: float(t) - float(a)
+                            for j, a in zip(jobs, arrs)}
+        self.advance_to(t)
+        eff = self._effective_topology()
+        before = backlog_seconds(eff, self.state)
+        per_window = self.schedule_windows(windows, pad_to=pad_to,
+                                           method=method)
+        walls = 0.0
+        for w, (jobs, placements) in enumerate(zip(windows, per_window)):
+            arrs = (arrivals[w] if arrivals is not None
+                    else [t] * len(jobs))
+            self.trace.arrivals_by_name.update(
+                {j.name: float(a) for j, a in zip(jobs, arrs)})
+            # Backlogs come from the scheduler's per-window post-commit
+            # snapshots (ledger-synced in exact mode), so the recorded
+            # telemetry matches what W submit_window calls would have read
+            # — not the solver's fluid committed queues, which differ from
+            # the ledger materialization in the last ulp.
+            after = backlog_seconds(eff, self._window_states[w])
+            solve_w = float(placements[0].plan.meta.get(
+                "solve_share_s", placements[0].plan.meta.get("solve_s", 0.0)))
+            walls += solve_w
+            wait = waits[w]
+            self.trace.records.append(ArrivalRecord(
+                time=t,
+                names=tuple(p.job_name for p in placements),
+                latencies=tuple(p.bound_s if wait is None
+                                else wait[p.job_name] + p.bound_s
+                                for p in placements),
+                backlog_before=before,
+                backlog_after=after,
+                solve_s=solve_w,
+            ))
+            before = after
+        self.last_solve_s = walls
+        return per_window
+
     def submit(self, t: float, requests: list[Request],
                *, pad_to: int | None = None) -> list[Placement]:
         return self.submit_jobs(t, requests_to_jobs(requests), pad_to=pad_to)

@@ -52,6 +52,8 @@ committed in place of the old one).
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
 
 import numpy as np
 
@@ -344,15 +346,20 @@ class RoutedScheduler:
         """Solve-time/closure-build telemetry of the most recent placement.
 
         ``closure_builds`` counts host-level min-plus closure builds during
-        the solve — with the round-level reuse pipeline a greedy solve over
-        J jobs reports exactly J (one build per round), so a regression that
-        reintroduces per-call rebuilds shows up here first.
+        the solve — the reference round loop reports exactly J (one build
+        per round, so a regression that reintroduces per-call rebuilds
+        shows up here first) while the fused solver reports 0 (its closure
+        work happens inside the device program; the honest per-solve
+        accounting is ``fused``/``dispatches``/``rounds_per_dispatch``).
         """
         if self.last_plan is None:
             return {}
         m = self.last_plan.meta
-        return {k: m[k] for k in ("method", "solve_s", "closure_builds",
-                                  "n_routings") if k in m}
+        return {k: m[k] for k in ("method", "solve_s", "solve_share_s",
+                                  "closure_builds", "n_routings", "fused",
+                                  "dispatches", "rounds_per_dispatch",
+                                  "windows_per_dispatch", "jit_compiled")
+                if k in m}
 
     def _effective_topology(self) -> Topology:
         if not self.degraded:
@@ -375,25 +382,40 @@ class RoutedScheduler:
     # Solvers that can fill plan.paths during the solve, reusing each
     # round's closures (greedy.greedy_route(extract_paths=True)).  For any
     # other method _ledger_commit falls back to a full replay_solution.
-    _PATH_SOLVERS = ("greedy", "lazy")
+    _PATH_SOLVERS = ("greedy", "greedy_ref", "lazy")
+
+    def _want_paths(self, method: str) -> bool:
+        return ((self.ledger is not None or self.commit_log is not None)
+                and method in self._PATH_SOLVERS)
 
     def _solve_and_commit(self, batch: J.JobBatch,
                           names: list[str] | None = None,
                           method: str | None = None) -> Plan:
         method = self.method if method is None else method
         topo = self._effective_topology()
-        pre_state = self.state
         opts = self.solver_opts
-        if ((self.ledger is not None or self.commit_log is not None)
-                and method in self._PATH_SOLVERS):
+        if self._want_paths(method):
             # The ledger charges bytes to explicit hops: have the solver
             # extract them per round instead of re-replaying per arrival.
             opts = {"extract_paths": True, **opts}
         plan = solvers.solve(topo, batch, method=method,
                              state=self.state, **opts)
+        return self._commit_plan(topo, batch, plan, self.state, names)
+
+    def _commit_plan(self, topo: Topology, batch: J.JobBatch, plan: Plan,
+                     pre_state: QueueState,
+                     names: list[str] | None) -> Plan:
+        """Commit one solved plan: queue state, ledger/commit-log, telemetry.
+
+        Shared by the per-batch path (:meth:`_solve_and_commit`) and the
+        cross-arrival fused path (:meth:`schedule_windows`), which solves
+        W windows in one dispatch and then commits them through here one
+        at a time (``pre_state`` = the queue state that window was solved
+        against).
+        """
         if plan.net is None:  # e.g. the exact solver reports no queue state
             plan = dataclasses.replace(
-                plan, net=plan.commit(topo.view(self.state), batch))
+                plan, net=plan.commit(topo.view(pre_state), batch))
         if self.ledger is None:
             # Committed backlogs come from the plan; the clock is ours to
             # keep.  (In exact mode the ledger sync below is authoritative,
@@ -403,7 +425,11 @@ class RoutedScheduler:
         if self.ledger is not None or self.commit_log is not None:
             plan = self._ledger_commit(topo, batch, plan, pre_state, names)
         self.last_plan = plan
-        self.last_solve_s = float(plan.meta.get("solve_s", 0.0))
+        # Fused multi-window plans carry the shared dispatch's wall in
+        # solve_s and their per-window share in solve_share_s; accumulate
+        # the share so total_solve_s sums to real wall, not W * wall.
+        self.last_solve_s = float(plan.meta.get(
+            "solve_share_s", plan.meta.get("solve_s", 0.0)))
         self.total_solve_s += self.last_solve_s
         return plan
 
@@ -470,6 +496,100 @@ class RoutedScheduler:
 
     def schedule(self, requests: list[Request]) -> list[Placement]:
         return self.schedule_jobs(requests_to_jobs(requests))
+
+    def schedule_windows(self, windows: list[list[J.InferenceJob]],
+                         *, pad_to: int | None = None,
+                         method: str | None = None) -> list[list[Placement]]:
+        """Place several queued arrival windows in **one** fused dispatch.
+
+        Windows are solved in order, each against the previous window's
+        committed queues (``solvers.solve_fused``), then committed one at
+        a time so the ledger/commit-log records match W sequential
+        :meth:`schedule_jobs` calls.  Only the fused greedy has a
+        multi-window device program; any other method falls back to
+        sequential scheduling (same results, W dispatches).
+        """
+        method = self.method if method is None else method
+        if not windows:
+            self._window_states = []
+            return []
+        if method != "greedy" or len(windows) == 1:
+            out = []
+            self._window_states = []
+            for jobs in windows:
+                out.append(self.schedule_jobs(jobs, pad_to=pad_to,
+                                              method=method))
+                self._window_states.append(self.state)
+            return out
+        topo = self._effective_topology()
+        batches = [J.batch_jobs(jobs, pad_to=pad_to) for jobs in windows]
+        opts = self.solver_opts
+        if self._want_paths(method):
+            opts = {"extract_paths": True, **opts}
+        plans = solvers.solve_fused(topo, batches, state=self.state,
+                                    pad_to=pad_to, **opts)
+        out = []
+        # Per-window post-commit queue snapshots: after _commit_plan,
+        # self.state is authoritative (ledger-synced in exact mode, plan
+        # queues in fluid), so telemetry reading these matches what W
+        # sequential schedule_jobs calls would have recorded.
+        self._window_states = []
+        for jobs, batch, plan in zip(windows, batches, plans):
+            pre_state = self.state
+            plan = self._commit_plan(topo, batch, plan, pre_state,
+                                     [j.name for j in jobs])
+            self._last = (batch, jobs, pre_state, topo, self._now,
+                          self.ledger, self.commit_log)
+            if self.ledger is not None:
+                for j in jobs:
+                    self.inflight_jobs[j.name] = j
+            out.append(self._placements(plan, jobs))
+            self._window_states.append(self.state)
+        return out
+
+    def warmup(self, sample_jobs: list[J.InferenceJob],
+               *, pad_to: int | None = None, max_jobs: int | None = None,
+               window_counts: tuple[int, ...] = ()) -> dict:
+        """Pre-compile the fused solve at this deployment's serving shapes.
+
+        Runs throwaway solves (pure — no queue state, ledger, clock, or
+        telemetry mutation) so that steady-state arrivals never pay a jit
+        compile wall: one per power-of-two job-count bucket up to
+        ``max_jobs`` (default: ``len(sample_jobs)``), plus one fused
+        multi-window program per entry of ``window_counts``.  The
+        streaming pipeline's "measured" latency model assumes warmed
+        shapes; re-compiles that still slip through (an unseen model mix,
+        a new window count) are flagged by ``meta["jit_compiled"]`` and
+        excluded from its EMA.  Returns ``{"compiles": n, "wall_s": w}``.
+        """
+        if self.method != "greedy" or not sample_jobs:
+            return {"compiles": 0, "wall_s": 0.0}
+        t0 = time.perf_counter()
+        topo = self._effective_topology()
+        opts = dict(self.solver_opts)
+        if self._want_paths(self.method):
+            opts = {"extract_paths": True, **opts}
+        top = max_jobs if max_jobs is not None else len(sample_jobs)
+        sizes, s = [], 1
+        while s < top:
+            sizes.append(s)
+            s *= 2
+        sizes.append(s)
+        cyc = list(itertools.islice(itertools.cycle(sample_jobs), sizes[-1]))
+        compiles = 0
+        for size in sizes:
+            plan = solvers.solve(topo, J.batch_jobs(cyc[:size], pad_to=pad_to),
+                                 method=self.method, state=self.state, **opts)
+            compiles += int(plan.meta.get("jit_compiled", False))
+        for w in window_counts:
+            if w < 2:
+                continue
+            batches = [J.batch_jobs(cyc[: sizes[-1]], pad_to=pad_to)
+                       for _ in range(w)]
+            plans = solvers.solve_fused(topo, batches, state=self.state,
+                                        pad_to=pad_to, **opts)
+            compiles += int(plans[0].meta.get("jit_compiled", False))
+        return {"compiles": compiles, "wall_s": time.perf_counter() - t0}
 
     def replan_last(self) -> list[Placement] | None:
         """Re-place the most recent batch against updated cluster health.

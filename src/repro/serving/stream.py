@@ -29,7 +29,17 @@ decoupled stages:
      clock* (``solver_latency`` — a constant, or ``"measured"``: an EMA of
      the real solve walls the scheduler reports via ``last_solve_s``), so
      solve latency itself delays commits and a slow solver visibly backs
-     the system up.  The drain — the authoritative
+     the system up.  With ``fuse_windows > 1`` (batched mode) the solver
+     server drains up to that many queued windows per start in **one**
+     cross-arrival fused dispatch (:meth:`OnlineScheduler.submit_windows`)
+     — when the solver falls behind and windows pile up, each dispatch
+     clears several of them at once instead of paying per-window dispatch
+     overhead serially.  Solve walls that paid a jit compile
+     (``meta["jit_compiled"]``) are excluded from the ``"measured"`` EMA
+     and recorded separately (``StreamTrace.compile_walls``) — a single
+     compile wall would otherwise poison the latency model for the rest
+     of the run; :func:`run_stream`'s ``warmup=True`` pre-compiles the
+     serving shapes so steady state never pays one.  The drain — the authoritative
      :class:`~repro.core.eventsim.EventEngine` clock in exact mode, the
      fluid model otherwise — advances independently underneath: the
      scheduler drains to each *commit* instant, not to each arrival, so
@@ -84,6 +94,10 @@ class StreamConfig:
     solve walls); ``max_pending`` bounds the admitted-but-uncommitted
     buffer and ``policy`` picks what happens to arrivals beyond it
     (``"defer"`` queues them FIFO, ``"shed"`` drops them).
+    ``fuse_windows`` lets one solver start drain up to that many queued
+    windows in a single cross-arrival fused dispatch (batched mode only;
+    the default 1 preserves the window-per-dispatch behaviour the δ=0/B=1
+    serial-parity gate is defined over).
     """
 
     window_s: float = 0.0
@@ -92,12 +106,16 @@ class StreamConfig:
     solver_latency: float | str = 0.0
     max_pending: int | None = None
     policy: str = "defer"
+    fuse_windows: int = 1
 
     def __post_init__(self):
         if self.window_s < 0:
             raise ValueError(f"window_s must be >= 0, got {self.window_s}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.fuse_windows < 1:
+            raise ValueError(
+                f"fuse_windows must be >= 1, got {self.fuse_windows}")
         if self.policy not in ("defer", "shed"):
             raise ValueError(
                 f"policy must be 'defer' or 'shed', got {self.policy!r}")
@@ -174,6 +192,9 @@ class StreamTrace(OnlineTrace):
     windows: list[WindowRecord] = dataclasses.field(default_factory=list)
     shed: list[dict] = dataclasses.field(default_factory=list)
     deferred: int = 0
+    # Solve walls that paid a jit compile (meta["jit_compiled"]): kept out
+    # of the "measured" EMA and reported separately in summary().
+    compile_walls: list[float] = dataclasses.field(default_factory=list)
 
     def _field(self, name: str) -> np.ndarray:
         return np.array([getattr(r, name) for r in self.requests],
@@ -212,6 +233,8 @@ class StreamTrace(OnlineTrace):
             "deferred": self.deferred,
             "shed": len(self.shed),
             "sustained_arr_s": self.sustained_arr_s(),
+            "compile_solves": len(self.compile_walls),
+            "compile_wall_s": float(sum(self.compile_walls)),
         })
         if self.shed:
             by_reason: dict[str, int] = {}
@@ -420,51 +443,79 @@ class StreamingPipeline:
     def _maybe_start(self, t: float) -> None:
         if self._busy or not self._solver_q:
             return
-        w = self._solver_q.popleft()
+        # Batched mode drains up to fuse_windows queued windows per solver
+        # start — one cross-arrival fused dispatch clears all of them, so
+        # a backed-up solver catches up k windows per modeled latency d
+        # instead of one.  Sequential mode keeps one window per start
+        # (width-1 solves have no multi-window device program).
+        k = (self.config.fuse_windows
+             if self.config.solve_mode == "batched" else 1)
+        ws = [self._solver_q.popleft()]
+        while len(ws) < k and self._solver_q:
+            ws.append(self._solver_q.popleft())
         d = self._model_latency()
         self._busy = True
-        self._push(t + d, _COMMIT, (w, d))
+        self._push(t + d, _COMMIT, (ws, d))
 
     # -- solver commit stage -------------------------------------------------
-    def _commit(self, t: float, w: _Window, d: float) -> None:
+    def _commit(self, t: float, ws: list[_Window], d: float) -> None:
         if self._injector is not None and self.sched.degraded:
             # Commit-time routability: the topology may have degraded since
             # these requests were admitted; a request whose endpoints are
             # dead or partitioned now has no serveable plan.
-            live = [a for a in w.jobs
-                    if self._injector.routable(int(a.job.src),
-                                               int(a.job.dst))]
-            for a in w.jobs:
-                if a not in live:
-                    self.trace.shed.append(
-                        {"time": t, "name": a.job.name,
-                         "reason": "unroutable"})
-                    self._pending -= 1
-            w.jobs = live
-        if not w.jobs:
-            self._finish_window(t, w, d, wall=0.0)
-            return
-        jobs = [a.job for a in w.jobs]
-        arrivals = [a.arrival_s for a in w.jobs]
-        placements = self._solve_window(t, jobs, arrivals)
-        if placements is None:        # solver died twice: shed the window
-            for a in w.jobs:
-                self.trace.shed.append({"time": t, "name": a.job.name,
-                                        "reason": "solver_error"})
-                self._pending -= 1
-            w.jobs = []
-            self._finish_window(t, w, d, wall=self.sched.last_solve_s)
-            return
-        wall = self.sched.last_solve_s
-        self._observe_solve(wall)
-        bound = {p.job_name: p.bound_s for p in placements}
-        for a in w.jobs:
-            self.trace.requests.append(RequestRecord(
-                name=a.job.name, window=w.index, arrival_s=a.arrival_s,
-                admit_s=a.admit_s, close_s=w.close_s, commit_s=t,
-                solve_s=d, service_s=bound[a.job.name]))
-        self._pending -= len(w.jobs)
-        self._finish_window(t, w, d, wall=wall)
+            for w in ws:
+                live = [a for a in w.jobs
+                        if self._injector.routable(int(a.job.src),
+                                                   int(a.job.dst))]
+                for a in w.jobs:
+                    if a not in live:
+                        self.trace.shed.append(
+                            {"time": t, "name": a.job.name,
+                             "reason": "unroutable"})
+                        self._pending -= 1
+                w.jobs = live
+        nonempty = [w for w in ws if w.jobs]
+        walls: dict[int, float] = {}
+        if nonempty:
+            jobs_w = [[a.job for a in w.jobs] for w in nonempty]
+            arrs_w = [[a.arrival_s for a in w.jobs] for w in nonempty]
+            if len(nonempty) == 1:
+                one = self._solve_window(t, jobs_w[0], arrs_w[0])
+                per = None if one is None else [one]
+            else:
+                per = self._solve_windows(t, jobs_w, arrs_w)
+            wall = self.sched.last_solve_s
+            if per is None:           # solver died twice: shed the group
+                for w in nonempty:
+                    for a in w.jobs:
+                        self.trace.shed.append(
+                            {"time": t, "name": a.job.name,
+                             "reason": "solver_error"})
+                        self._pending -= 1
+                    w.jobs = []
+                    walls[id(w)] = wall / len(nonempty)
+            else:
+                # A wall that paid a jit compile would poison the EMA (the
+                # model would predict compile-sized latency for every
+                # following solve); record it separately instead.
+                if bool(self.sched.stats().get("jit_compiled", False)):
+                    self.trace.compile_walls.append(wall)
+                else:
+                    self._observe_solve(wall)
+                for w, placements in zip(nonempty, per):
+                    walls[id(w)] = float(placements[0].plan.meta.get(
+                        "solve_share_s", wall / len(nonempty)))
+                    bound = {p.job_name: p.bound_s for p in placements}
+                    for a in w.jobs:
+                        self.trace.requests.append(RequestRecord(
+                            name=a.job.name, window=w.index,
+                            arrival_s=a.arrival_s, admit_s=a.admit_s,
+                            close_s=w.close_s, commit_s=t,
+                            solve_s=d, service_s=bound[a.job.name]))
+                    self._pending -= len(w.jobs)
+        for w in ws:
+            self._finish_window(t, w, d, wall=walls.get(id(w), 0.0))
+        self._release(t)
 
     def _solve_window(self, t: float, jobs, arrivals):
         """One window's solve with the robustness contract: a solver
@@ -498,11 +549,40 @@ class StreamingPipeline:
                     return None
         return None
 
+    def _solve_windows(self, t: float, jobs_w, arrs_w):
+        """Cross-arrival fused solve of several windows, with the same
+        robustness contract as :meth:`_solve_window`: a clean failure is
+        retried once, a partial failure (some windows committed before the
+        raise) is rolled back through the ledger and not retried.  Returns
+        per-window placement lists, or ``None`` when nothing commits."""
+        sched = self.sched
+        for attempt in (0, 1):
+            pre = (sched.ledger.names_seen if sched.ledger is not None
+                   else frozenset())
+            try:
+                return sched.submit_windows(t, jobs_w, arrivals=arrs_w,
+                                            pad_to=self._pad_to)
+            except Exception:  # noqa: BLE001 — serving must survive
+                landed = (sorted(sched.ledger.names_seen - pre)
+                          if sched.ledger is not None else [])
+                if landed:
+                    sched.ledger = sched.ledger.remove_jobs(landed, at=t)
+                    if sched.commit_log is not None:
+                        sched.commit_log = sched.commit_log.record_removal(
+                            t, landed)
+                    sched._sync_ledger_queues()
+                    sched._last = None
+                    return None
+        return None
+
     def _finish_window(self, t: float, w: _Window, d: float,
                        *, wall: float) -> None:
         self.trace.windows.append(WindowRecord(
             index=w.index, open_s=w.open_s, close_s=w.close_s, commit_s=t,
             size=len(w.jobs), solve_model_s=d, solve_wall_s=wall))
+
+    def _release(self, t: float) -> None:
+        """Free the solver server after a commit group lands."""
         self._busy = False
         # Commits free buffer capacity: re-admit deferred arrivals FIFO —
         # before any later traffic — so backpressure never reorders them.
@@ -520,6 +600,7 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
                max_batch: int = 1, solve_mode: str = "batched",
                solver_latency: float | str = 0.0,
                max_pending: int | None = None, policy: str = "defer",
+               fuse_windows: int = 1, warmup: bool = False,
                method: str = "greedy", drain_queues: bool = True,
                finish: bool = False, pad_to: int | None = None,
                process_params: dict | None = None,
@@ -542,6 +623,15 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
     commit log replayed).  ``fault_schedule``/``recovery``/``max_retries``
     inject infrastructure events into the pipeline's event heap (see
     :meth:`StreamingPipeline.run`) — requires ``drain="exact"``.
+
+    ``fuse_windows`` reaches the :class:`StreamConfig` (cross-arrival
+    fused dispatch of queued windows); ``warmup=True`` pre-compiles the
+    fused solve at this run's serving shapes
+    (:meth:`~repro.serving.scheduler.RoutedScheduler.warmup`) before any
+    traffic, so the ``"measured"`` latency model never sees a compile
+    wall.  Warmup samples throwaway jobs from the scenario, which
+    advances its shared job-name counter — a warmed run's job *names*
+    differ from an unwarmed one's (values are unaffected).
     """
     rng = np.random.default_rng(seed)
     params = A.resolve_rate(process, rate, process_params)
@@ -549,12 +639,18 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
     cfg = StreamConfig(window_s=window_s, max_batch=max_batch,
                        solve_mode=solve_mode,
                        solver_latency=solver_latency,
-                       max_pending=max_pending, policy=policy)
+                       max_pending=max_pending, policy=policy,
+                       fuse_windows=fuse_windows)
     sched = OnlineScheduler(scenario.topology, method=method,
                             drain_queues=drain_queues, **solver_opts)
     pipe = StreamingPipeline(sched, cfg)
     if pad_to is None:
         pad_to = getattr(scenario, "max_layers", None)
+    if warmup:
+        wrng = np.random.default_rng(seed)
+        counts = (fuse_windows,) if fuse_windows > 1 else ()
+        sched.warmup(scenario.sample_jobs(wrng, max(max_batch, 1)),
+                     pad_to=pad_to, window_counts=counts)
     if hasattr(scenario, "job_stream"):
         stream = scenario.job_stream(rng, times, batch_size)
     else:

@@ -39,14 +39,19 @@ def _quickstart():
 # ---------------------------------------------------------------------------
 
 def test_one_closure_build_per_greedy_round():
-    """A greedy round = exactly one closure build (routing + commit share
-    the round's stack; the seed rebuilt it J+2 times per round)."""
+    """A reference greedy round = exactly one closure build (routing +
+    commit share the round's stack; the seed rebuilt it J+2 times per
+    round).  The fused solver does its closure work inside the device
+    program, so the host-level counter stays at zero."""
     rng = np.random.default_rng(0)
     net, jobs = random_instance(rng, num_jobs=5)
     batch = J.batch_jobs(jobs)
     SP.reset_closure_build_count()
-    greedy.greedy_route(net, batch)
+    greedy.greedy_route_ref(net, batch)
     assert SP.closure_build_count() == batch.num_jobs  # one per round
+    SP.reset_closure_build_count()
+    greedy.greedy_route(net, batch)
+    assert SP.closure_build_count() == 0  # fused: all in-program
 
 
 def test_lazy_one_closure_build_per_round():
@@ -62,8 +67,14 @@ def test_solver_meta_reports_closure_builds():
     rng = np.random.default_rng(2)
     net, jobs = random_instance(rng, num_jobs=4)
     batch = J.batch_jobs(jobs)
-    plan = solvers.solve(net, batch, method="greedy")
+    plan = solvers.solve(net, batch, method="greedy_ref")
     assert plan.meta["closure_builds"] == batch.num_jobs
+    # fused greedy: zero host builds, one dispatch, honest meta
+    fused = solvers.solve(net, batch, method="greedy")
+    assert fused.meta["closure_builds"] == 0
+    assert fused.meta["fused"] is True
+    assert fused.meta["dispatches"] == 1
+    assert fused.meta["rounds_per_dispatch"] == batch.num_jobs
 
 
 def test_batch_closures_dedupe_identical_data():

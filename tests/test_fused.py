@@ -1,0 +1,270 @@
+"""Fused single-dispatch greedy solver: bit-identity vs the host-loop
+reference (``greedy_route_ref``) across a seeded scenario catalog, honest
+dispatch accounting, cross-arrival multi-window parity, scheduler-level
+lockstep, and warmup purity."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import greedy, jobs as J, network as N, solvers
+from repro.core import shortest_path as SP
+from repro.scenarios import make_scenario
+from repro.serving.online import OnlineScheduler
+from util import random_instance
+
+
+def _assert_plans_bitwise(fused, ref, *, paths=False):
+    assert fused.order.tolist() == ref.order.tolist()
+    np.testing.assert_array_equal(np.asarray(fused.assign),
+                                  np.asarray(ref.assign))
+    assert np.asarray(fused.bounds).tolist() == np.asarray(ref.bounds).tolist()
+    np.testing.assert_array_equal(np.asarray(fused.net.q_node),
+                                  np.asarray(ref.net.q_node))
+    np.testing.assert_array_equal(np.asarray(fused.net.q_link),
+                                  np.asarray(ref.net.q_link))
+    if paths:
+        assert fused.paths == ref.paths
+
+
+# ---------------------------------------------------------------------------
+# Scenario-catalog bit-identity (the CI parity gate's test-suite twin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,num_jobs,with_queues", [
+    (0, 5, False), (1, 5, True), (2, 7, True),   # 7: odd J exercises pow2 pad
+    (3, 3, False), (4, 8, True), (5, 1, True),
+])
+def test_fused_bit_identical_to_ref(seed, num_jobs, with_queues):
+    rng = np.random.default_rng(seed)
+    net, jobs = random_instance(rng, num_jobs=num_jobs,
+                                with_queues=with_queues)
+    batch = J.batch_jobs(jobs)
+    fused = greedy.greedy_route(net, batch)
+    ref = greedy.greedy_route_ref(net, batch)
+    _assert_plans_bitwise(fused, ref)
+
+
+@pytest.mark.parametrize("with_queues", [False, True])
+def test_fused_extract_paths_matches_ref(with_queues):
+    """The post-pass path extraction replays the reference's per-round
+    extraction bit-for-bit — including at queued states, where an
+    FMA-contracted edge weight would flip equal-cost hop ties."""
+    rng = np.random.default_rng(10 + with_queues)
+    net, jobs = random_instance(rng, num_jobs=6, with_queues=with_queues)
+    batch = J.batch_jobs(jobs)
+    fused = greedy.greedy_route(net, batch, extract_paths=True)
+    ref = greedy.greedy_route_ref(net, batch, extract_paths=True)
+    _assert_plans_bitwise(fused, ref, paths=True)
+    assert set(fused.paths) == set(range(batch.num_jobs))
+
+
+def test_fused_dedupe_rows_bit_identical():
+    """Duplicate data rows (the dedupe fast path) keep bit-identity."""
+    rng = np.random.default_rng(20)
+    net, jobs = random_instance(rng, num_jobs=3, with_queues=True)
+    base = jobs[0]
+    twins = [dataclasses.replace(base, name=f"twin{i}", src=int(s), dst=int(d))
+             if dataclasses.is_dataclass(base) else base
+             for i, (s, d) in enumerate([(1, 4), (2, 5)])]
+    if not dataclasses.is_dataclass(base):  # plain class: rebuild by hand
+        twins = [J.InferenceJob(f"twin{i}", int(s), int(d),
+                                base.comp.copy(), base.data.copy())
+                 for i, (s, d) in enumerate([(1, 4), (2, 5)])]
+    batch = J.batch_jobs(jobs + twins)
+    dp = SP.dedupe_plan(batch)
+    assert dp.uniq.shape[0] < batch.num_jobs  # dedupe actually engaged
+    _assert_plans_bitwise(greedy.greedy_route(net, batch),
+                          greedy.greedy_route_ref(net, batch))
+
+
+def test_fused_unroutable_inf_tie():
+    """A stranded job's INF-clipped cost must not tie into the routed-job
+    mask inside the fused scan (same guard as the host loop)."""
+    net = N.make_network(4, [(0, 1, 2.0), (1, 2, 2.0)],
+                         [0.0, 1.0, 1.0, 1.0])  # node 3 unreachable
+    j0 = J.InferenceJob("ok", 0, 2, np.array([1.0], np.float32),
+                        np.array([2.0, 2.0], np.float32))
+    j1 = J.InferenceJob("stranded", 0, 3, np.array([1.0], np.float32),
+                        np.array([2.0, 2.0], np.float32))
+    batch = J.batch_jobs([j0, j1])
+    fused = greedy.greedy_route(net, batch)
+    ref = greedy.greedy_route_ref(net, batch)
+    _assert_plans_bitwise(fused, ref)
+    assert fused.order[0] == 0
+    assert fused.bounds[1] >= 1e29
+
+
+# ---------------------------------------------------------------------------
+# Honest dispatch accounting
+# ---------------------------------------------------------------------------
+
+def test_fused_solve_is_one_dispatch():
+    rng = np.random.default_rng(30)
+    net, jobs = random_instance(rng, num_jobs=8)  # 8 = pow2: exact meta
+    batch = J.batch_jobs(jobs)
+    SP.reset_closure_build_count()
+    greedy.reset_fused_dispatch_count()
+    plan = greedy.greedy_route(net, batch)
+    assert greedy.fused_dispatch_count() == 1
+    assert SP.closure_build_count() == 0
+    assert plan.meta["fused"] is True
+    assert plan.meta["dispatches"] == 1
+    assert plan.meta["rounds_per_dispatch"] == batch.num_jobs
+    assert plan.meta["windows_per_dispatch"] == 1
+    # a second solve at the same shapes must not recompile
+    greedy.greedy_route(net, batch)
+    assert greedy.fused_dispatch_count() == 2
+
+
+# ---------------------------------------------------------------------------
+# Cross-arrival multi-window parity
+# ---------------------------------------------------------------------------
+
+def test_multi_window_matches_sequential_fused():
+    """W ragged windows in one multi-window dispatch == W sequential fused
+    solves threading committed queues, bit-for-bit."""
+    rng = np.random.default_rng(40)
+    net, jobs = random_instance(rng, num_jobs=12, with_queues=True)
+    sizes = (5, 3, 4)
+    batches, off = [], 0
+    for n in sizes:
+        batches.append(J.batch_jobs(jobs[off:off + n],
+                                    pad_to=max(j.num_layers
+                                               for j in jobs)))
+        off += n
+    greedy.reset_fused_dispatch_count()
+    fused = greedy.greedy_route_windows(net, batches, extract_paths=True)
+    assert greedy.fused_dispatch_count() == 1
+    cur, seq = net, []
+    for b in batches:
+        p = greedy.greedy_route(cur, b, extract_paths=True)
+        seq.append(p)
+        cur = p.net
+    for pf, ps in zip(fused, seq):
+        _assert_plans_bitwise(pf, ps, paths=True)
+        assert pf.meta["windows_per_dispatch"] == len(sizes)
+
+
+def test_solve_fused_entrypoint_meta():
+    rng = np.random.default_rng(41)
+    net, jobs = random_instance(rng, num_jobs=6)
+    lmax = max(j.num_layers for j in jobs)
+    batches = [J.batch_jobs(jobs[:4], pad_to=lmax),
+               J.batch_jobs(jobs[4:], pad_to=lmax)]
+    plans = solvers.solve_fused(net, batches)
+    assert len(plans) == 2
+    total_share = sum(p.meta["solve_share_s"] for p in plans)
+    for p in plans:
+        assert p.meta["fused"] is True
+        assert p.meta["solve_share_s"] <= p.meta["solve_s"]
+    assert total_share == pytest.approx(plans[0].meta["solve_s"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level lockstep
+# ---------------------------------------------------------------------------
+
+def _run_online(sc, method, n_windows=3, per=4):
+    rng = np.random.default_rng(9)
+    s = OnlineScheduler(sc.topology, drain="exact", sim_engine="indexed",
+                        track_commits=True, method=method)
+    t = 0.0
+    for _ in range(n_windows):
+        t += 0.05
+        s.submit_window(t, sc.sample_jobs(rng, per), pad_to=sc.max_layers)
+    s.finish()
+    return s, s.replay_ground_truth()
+
+
+def test_online_fused_reproduces_serial_trace():
+    """Exact-mode online run with the fused solver == the greedy_ref run:
+    every recorded latency, backlog, completion and replayed ground truth
+    (compares values, not names — the scenario job-name counter differs
+    between runs)."""
+    sc = make_scenario("paper-small", seed=0)
+    (sf, gf), (sr, gr) = (_run_online(sc, "greedy"),
+                          _run_online(sc, "greedy_ref"))
+    for x, y in zip(sf.trace.records, sr.trace.records):
+        assert x.latencies == y.latencies
+        assert x.backlog_before == y.backlog_before
+        assert x.backlog_after == y.backlog_after
+    assert (list(sf.trace.completions.values())
+            == list(sr.trace.completions.values()))
+    assert list(gf.values()) == list(gr.values())
+
+
+def test_submit_windows_matches_sequential_submits():
+    """Fused cross-arrival submission vs W sequential submit_window calls.
+
+    Fluid mode is bit-identical.  Exact mode re-materializes queues from
+    the ledger between sequential commits while the fused chain threads
+    the solver's committed queues mid-dispatch, so recorded *bounds* may
+    drift by f32-ulp rounding (~1e-7 relative); committed work — and
+    hence completions and replayed ground truth — stays bitwise equal,
+    as does the backlog telemetry (read from per-window post-commit
+    snapshots)."""
+    sc = make_scenario("paper-small", seed=0)
+
+    def run(mode, drain):
+        rng = np.random.default_rng(7)
+        kw = (dict(track_commits=True, sim_engine="indexed")
+              if drain == "exact" else {})
+        s = OnlineScheduler(sc.topology, drain=drain, **kw)
+        t = 0.0
+        for _ in range(3):
+            t += 0.05
+            wins = [sc.sample_jobs(rng, n) for n in (4, 3)]
+            if mode == "fused":
+                s.submit_windows(t, wins, pad_to=sc.max_layers)
+            else:
+                for w in wins:
+                    s.submit_window(t, w, pad_to=sc.max_layers)
+        if drain == "exact":
+            s.finish()
+        return s
+
+    for drain in ("fluid", "exact"):
+        mf, ms = run("fused", drain), run("seq", drain)
+        assert len(mf.trace.records) == len(ms.trace.records)
+        for x, y in zip(mf.trace.records, ms.trace.records):
+            assert x.backlog_before == y.backlog_before
+            assert x.backlog_after == y.backlog_after
+            if drain == "fluid":
+                assert x.latencies == y.latencies
+            else:
+                np.testing.assert_allclose(np.asarray(x.latencies),
+                                           np.asarray(y.latencies),
+                                           rtol=1e-5)
+        if drain == "exact":
+            assert (list(mf.trace.completions.values())
+                    == list(ms.trace.completions.values()))
+            assert (list(mf.replay_ground_truth().values())
+                    == list(ms.replay_ground_truth().values()))
+
+
+# ---------------------------------------------------------------------------
+# Warmup purity
+# ---------------------------------------------------------------------------
+
+def test_warmup_is_pure_and_caches():
+    sc = make_scenario("paper-small", seed=0)
+    rng = np.random.default_rng(50)
+    s = OnlineScheduler(sc.topology, drain="exact", sim_engine="indexed",
+                        track_commits=True)
+    sample = sc.sample_jobs(rng, 5)
+    qn0 = np.asarray(s.state.q_node).copy()
+    ql0 = np.asarray(s.state.q_link).copy()
+    clock0, ledger0 = s._now, s.ledger
+    n_records0 = len(s.trace.records)
+    out = s.warmup(sample, pad_to=sc.max_layers, window_counts=(2,))
+    assert out["compiles"] >= 1
+    assert out["wall_s"] > 0
+    np.testing.assert_array_equal(np.asarray(s.state.q_node), qn0)
+    np.testing.assert_array_equal(np.asarray(s.state.q_link), ql0)
+    assert s._now == clock0 and s.ledger is ledger0
+    assert len(s.trace.records) == n_records0
+    # warmed shapes: a second warmup compiles nothing
+    again = s.warmup(sample, pad_to=sc.max_layers, window_counts=(2,))
+    assert again["compiles"] == 0
