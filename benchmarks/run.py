@@ -12,7 +12,6 @@ headline number.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

@@ -10,7 +10,6 @@ Each entry provides:
 from __future__ import annotations
 
 import importlib
-from typing import Callable
 
 ARCH_IDS = [
     "olmo_1b", "smollm_135m", "minicpm_2b", "gemma3_1b", "xlstm_125m",

@@ -170,4 +170,5 @@ def anneal(net: ComputeNetwork, batch: JobBatch, *, seed: int = 0,
     return Plan.from_order(
         assign, order, bounds, solver="sa", paths=paths, net=final,
         meta={"history": np.min(hist, axis=0), "iters": iters,
-              "num_chains": num_chains, "chain_cost": float(best_c[i])})
+              "num_chains": num_chains, "chain_cost": float(best_c[i]),
+              "n_routings": int(iters) * int(num_chains)})

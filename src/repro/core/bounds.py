@@ -15,7 +15,6 @@ h_L only ever loosens alpha, so the bound stays valid).
 """
 from __future__ import annotations
 
-import itertools
 
 import networkx as nx
 import numpy as np

@@ -400,6 +400,10 @@ class _LedgerEngine:
 
 def _attach(ledger: CommittedWork, eng: _LedgerEngine) -> CommittedWork:
     eng.stamp += 1
+    # The blessed stamp-guarded engine cache slot ("the persistent engine
+    # cache" above): not a field, never a pytree leaf, and deliberately
+    # dropped by dataclasses.replace.
+    # repro-lint: disable=RL004 -- stamp-guarded cache slot, not a field
     object.__setattr__(ledger, _ENGINE_SLOT, (eng, eng.stamp))
     return ledger
 

@@ -136,12 +136,14 @@ def exact_plan(net: ComputeNetwork, batch: JobBatch, *,
 
     best_mk = np.inf
     best: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+    n_routings = 0
     for perm in itertools.permutations(range(J)):
         cur = net
         assign = np.zeros((J, lmax), np.int32)
         bounds = np.zeros((J,), np.float64)
         for j in perm:
             L = int(nl[j])
+            n_routings += 1
             cost, a = exact_route_bitmask(
                 cur, comp[j, :L], data[j, : L + 1], int(src[j]), int(dst[j]))
             bounds[j] = cost
@@ -161,7 +163,8 @@ def exact_plan(net: ComputeNetwork, batch: JobBatch, *,
     assert best is not None
     assign, order, bounds = best
     return Plan.from_order(assign, order, bounds, solver="exact",
-                           meta={"orders_tried": math.factorial(J)})
+                           meta={"orders_tried": math.factorial(J),
+                                 "n_routings": n_routings})
 
 
 def brute_force_makespan(net: ComputeNetwork, batch: JobBatch) -> float:

@@ -87,7 +87,11 @@ def _job_paths(pre_net: ComputeNetwork, batch: JobBatch, j: int, assign_row,
 # Host-level dispatch telemetry for the fused path: one increment per
 # ``_fused_solve``/``_fused_solve_many`` *execution* (unlike trace-time
 # counters — see kernels/ops.dispatch_counts — these count real dispatches,
-# so the one-dispatch-per-solve property is directly assertable).
+# so the one-dispatch-per-solve property is directly assertable).  Two
+# lint rules guard this contract statically: RL003 (host-sync-in-device)
+# keeps syncs out of the scanned round loop, and RL006
+# (dispatch-accounting) makes every solver thread these numbers into
+# plan.meta; tests/test_fused.py adds the runtime transfer_guard check.
 _n_fused_dispatches = 0
 
 
@@ -262,10 +266,13 @@ def _paths_post(net0: ComputeNetwork, batch: JobBatch, order, assigns,
     ends = np.where(np.arange(lmax + 1)[None, :] >= L_sel[:, None],
                     dst_sel[:, None], ends).astype(np.int32)
 
+    # device_put (not jnp.asarray): staging is an *explicit* transfer so
+    # the solver path stays clean under jax.transfer_guard("disallow")
+    # (the runtime complement of lint rule RL003; see tests/test_fused.py).
     hops = jax.device_get(_walk_paths(
-        jnp.asarray(data_h[order]), jnp.asarray(ql_pre), link_invrate(net0),
-        jnp.asarray(t_sel), jnp.asarray(starts), jnp.asarray(ends),
-        max_hops=v))
+        jax.device_put(data_h[order]), jax.device_put(ql_pre),
+        link_invrate(net0), jax.device_put(t_sel), jax.device_put(starts),
+        jax.device_put(ends), max_hops=v))
     return {int(j): routing.hops_to_paths(hops[p], int(L_sel[p]))
             for p, j in enumerate(order)}
 
@@ -308,7 +315,7 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
     j_pad = _next_pow2(J)
     padded = _pad_batch(batch, j_pad)
     dplan = _bucket_dplan(SP.dedupe_plan(padded))
-    routed0 = jnp.asarray(np.arange(j_pad) >= J)    # dummies pre-routed
+    routed0 = jax.device_put(np.arange(j_pad) >= J)  # dummies pre-routed
     size0 = _bump_dispatch(_fused_solve)
     out = _fused_solve(net, padded, dplan, routed0, use_pallas=use_pallas)
     compiled = _took_compile(_fused_solve, size0)
@@ -320,8 +327,12 @@ def greedy_route(net: ComputeNetwork, batch: JobBatch,
     keep = slice(None) if (order >= 0).all() else order >= 0
     paths = None
     if extract_paths:
+        # host copies before mask-slicing: indexing a device array with a
+        # numpy mask is an implicit h2d of the indices (trips the
+        # transfer_guard("disallow") the parity tests run under)
+        ql_h, t_h = jax.device_get((ql_pre, t_sel))
         paths = _paths_post(net, batch, order[keep], assigns[keep],
-                            ql_pre[keep], t_sel[keep], num_layers_h)
+                            ql_h[keep], t_h[keep], num_layers_h)
     return _assemble_plan(
         batch, net.with_queues(q_node, q_link), order[keep], costs[keep],
         assigns[keep], paths,
@@ -353,11 +364,11 @@ def _pad_batch(batch: JobBatch, j_to: int) -> JobBatch:
 
     def pad0(x):
         width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
-        return jnp.asarray(np.pad(np.asarray(x), width))
+        return jax.device_put(np.pad(np.asarray(x), width))
 
     return JobBatch(src=pad0(batch.src), dst=pad0(batch.dst),
                     comp=pad0(batch.comp), data=pad0(batch.data),
-                    num_layers=pad0(batch.num_layers) + jnp.asarray(
+                    num_layers=pad0(batch.num_layers) + jax.device_put(
                         np.array([0] * J + [1] * pad, np.int32)))
 
 
@@ -373,9 +384,10 @@ def _pad_dplan(dplan: SP.DedupePlan, u_to: int, d_to: int) -> SP.DedupePlan:
         d_idx = np.concatenate([d_idx, np.repeat(d_idx[:1], u_pad, axis=0)])
     if d_pad:
         d_vals = np.concatenate([d_vals, np.repeat(d_vals[:1], d_pad)])
-    return SP.DedupePlan(uniq=jnp.asarray(uniq), inv=jnp.asarray(inv),
-                         d_vals=jnp.asarray(d_vals),
-                         d_idx=jnp.asarray(d_idx, jnp.int32))
+    return SP.DedupePlan(uniq=jax.device_put(uniq),
+                         inv=jax.device_put(inv),
+                         d_vals=jax.device_put(d_vals),
+                         d_idx=jax.device_put(d_idx.astype(np.int32)))
 
 
 def _bucket_dplan(dplan: SP.DedupePlan) -> SP.DedupePlan:
@@ -416,7 +428,7 @@ def greedy_route_windows(net: ComputeNetwork, batches: list[JobBatch],
     dplans = [_pad_dplan(d, u_max, d_max) for d in dplans]
     stack = lambda xs: jax.tree_util.tree_map(
         lambda *leaves: jnp.stack(leaves), *xs)
-    valid = jnp.asarray(np.array(
+    valid = jax.device_put(np.array(
         [[1] * b.num_jobs + [0] * (j_max - b.num_jobs) for b in batches],
         bool))
     size0 = _bump_dispatch(_fused_solve_many)
@@ -425,6 +437,13 @@ def greedy_route_windows(net: ComputeNetwork, batches: list[JobBatch],
     compiled = _took_compile(_fused_solve_many, size0)
     (orders, costs, assigns, ql_pre, t_sel), q_nodes, q_links = outs
     orders, costs, assigns = jax.device_get((orders, costs, assigns))
+    # host copies: per-window numpy indexing is free (d2h is zero-copy on
+    # CPU), while indexing the device arrays with python ints / numpy
+    # masks would implicitly stage the indices — tripping the
+    # transfer_guard("disallow") the parity tests run under
+    q_nodes, q_links = jax.device_get((q_nodes, q_links))
+    if extract_paths:
+        ql_pre, t_sel = jax.device_get((ql_pre, t_sel))
     plans = []
     for w, batch in enumerate(batches):
         J = batch.num_jobs
@@ -437,7 +456,8 @@ def greedy_route_windows(net: ComputeNetwork, batches: list[JobBatch],
                 t_sel[w][keep],
                 np.asarray(jax.device_get(padded[w].num_layers)))
         plans.append(_assemble_plan(
-            batch, net.with_queues(q_nodes[w], q_links[w]), order_w,
+            batch, net.with_queues(jax.device_put(q_nodes[w]),
+                                   jax.device_put(q_links[w])), order_w,
             costs[w][keep], assigns[w][keep], paths,
             meta=_fused_meta(J, rounds=j_max, windows=len(batches),
                              compiled=compiled, paths=extract_paths)))

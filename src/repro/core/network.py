@@ -136,10 +136,15 @@ def make_network(
     )
 
 
+@jax.jit
 def link_invrate(net: ComputeNetwork) -> jax.Array:
     """[V,V] reciprocal link capacity; INF where there is no link.
 
     The diagonal is 0: staying at a node costs nothing to "transfer".
+    Jitted so the scalar constants are baked at trace time — the eager
+    form implicitly staged them per call, tripping the
+    transfer_guard("disallow") the fused parity tests run under (every op
+    here is elementwise-exact, so jitting cannot change a bit).
     """
     v = net.num_nodes
     inv = jnp.where(net.mu_link > 0, 1.0 / jnp.maximum(net.mu_link, 1e-30), INF)

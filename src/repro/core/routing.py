@@ -69,6 +69,11 @@ def _dp_fwd(t: jax.Array, comp: jax.Array, src: jax.Array, dst: jax.Array,
         move_bp = jnp.argmin(g[:, None] + t_prev, axis=0)    # [V]
         moved = move + nw
         stay_wins = g <= moved
+        # Golden-locked DP recurrence with no fused form (the mul adds to a
+        # min, not a sum); the forward scan is never unrolled, and fused &
+        # ref solvers trace this same function, so its rounding is common
+        # to both sides of the parity gate.
+        # repro-lint: disable=RL001 -- no fused form; rounding is shared
         new_g = jnp.minimum(g, moved) + c_l * cinv
         new_g = jnp.minimum(new_g, INF)
         bp = jnp.where(stay_wins, -1, move_bp).astype(jnp.int32)
@@ -89,7 +94,9 @@ def _dp_back(total: jax.Array, bps: jax.Array) -> jax.Array:
     structural, not a float-rounding question (which also makes the
     ``unroll`` safe: there is no float mul-add for LLVM to re-contract,
     so the unrolled loop is the same gather chain with less XLA:CPU
-    loop machinery)."""
+    loop machinery).  Lint rule RL002 (unsafe-unroll) admits exactly this
+    kind of body — the *forward* DP must never unroll (RL001's pragma in
+    ``_dp_fwd`` documents why)."""
     u_star = jnp.argmin(total).astype(jnp.int32)
 
     def back(cur, bp_l):
@@ -181,6 +188,7 @@ def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
     lmax = comp.shape[0]
 
     a1 = assign[0]
+    # repro-lint: disable=RL001 -- mirrors _dp_fwd's rounding term-for-term
     cost0 = t[0, src, a1] + nw[a1] + comp[0] * cinv[a1]
 
     def step(carry, xs):
@@ -188,6 +196,7 @@ def cost_given_assignment(net: ComputeNetwork, comp: jax.Array, data: jax.Array,
         l, c_l = xs                      # l in 2..Lmax, layer l at assign[l-1]
         cur = assign[l - 1]
         active = l <= num_layers
+        # repro-lint: disable=RL001 -- mirrors _dp_fwd's rounding (as cost0)
         seg = t[l - 1, prev, cur] + jnp.where(cur == prev, 0.0, nw[cur]) \
             + c_l * cinv[cur]
         total = jnp.where(active, total + seg, total)

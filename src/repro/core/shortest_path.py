@@ -90,7 +90,9 @@ def layer_edge_weights(net: ComputeNetwork, data_sizes: jax.Array) -> jax.Array:
     # last ulp differently once queues were nonzero, breaking bitwise
     # solver parity (lax.optimization_barrier does not stop the
     # contraction on CPU).  At Q == 0 this form reproduces ``d * inv``
-    # bit-for-bit, so pre-change golden traces are unaffected.
+    # bit-for-bit, so pre-change golden traces are unaffected.  Lint rule
+    # RL001 (contraction-hazard) enforces this multiply-last form across
+    # every numerics module — `python -m repro.lint --list-rules`.
     w = (data_sizes[..., :, None, None] + net.q_link) * inv
     return jnp.minimum(w, INF)
 
@@ -118,7 +120,9 @@ def dedupe_data(batch) -> tuple[jax.Array, jax.Array]:
     """
     data = np.asarray(jax.device_get(batch.data))
     uniq, inv = np.unique(data, axis=0, return_inverse=True)
-    return jnp.asarray(uniq), jnp.asarray(inv.reshape(-1), jnp.int32)
+    # explicit staging: keeps solver drivers transfer_guard("disallow")-clean
+    return (jax.device_put(uniq),
+            jax.device_put(inv.reshape(-1).astype(np.int32)))
 
 
 @jax.tree_util.register_dataclass
@@ -151,8 +155,8 @@ def dedupe_plan(batch) -> DedupePlan:
     uniq_h = np.asarray(uniq)
     d_vals, d_idx = np.unique(uniq_h, return_inverse=True)
     return DedupePlan(
-        uniq=uniq, inv=inv, d_vals=jnp.asarray(d_vals),
-        d_idx=jnp.asarray(d_idx.reshape(uniq_h.shape), jnp.int32))
+        uniq=uniq, inv=inv, d_vals=jax.device_put(d_vals),
+        d_idx=jax.device_put(d_idx.reshape(uniq_h.shape).astype(np.int32)))
 
 
 def closures_for_dedup(net: ComputeNetwork, plan: DedupePlan,
@@ -224,7 +228,9 @@ def reconstruct_path(w: jax.Array, t: jax.Array, src: jax.Array, dst: jax.Array,
     gathers, adds, and an argmin — no multiply feeding an add, so there is
     no FMA for LLVM to contract differently across unroll factors.
     Post-arrival steps emit exactly the (-1, -1) padding, so the output is
-    bit-identical regardless of loop form.
+    bit-identical regardless of loop form.  Lint rule RL002
+    (unsafe-unroll) admits ``unroll > 1`` only for contraction-free
+    bodies like this one.
     """
 
     def step(state, _):

@@ -128,8 +128,11 @@ def advance(topo: Topology, state: QueueState, dt) -> QueueState:
     """
     dt = jnp.asarray(dt, jnp.float32)
     return QueueState(
+        # repro-lint: disable=RL001 -- fluid drain IS q - mu*dt; sim state,
         q_node=jnp.maximum(state.q_node - topo.mu_node * dt, 0.0),
+        # repro-lint: disable=RL001 -- not the parity-gated solver closures
         q_link=jnp.maximum(state.q_link - topo.mu_link * dt, 0.0),
+        # repro-lint: disable=RL005 -- single-step add; drivers re-stamp f64
         clock=state.clock + dt,
     )
 

@@ -46,7 +46,19 @@ def dispatch_counts() -> dict[str, int]:
     adds zero).  Per-solve execution telemetry lives in the solver's
     plan meta instead: ``meta["dispatches"]`` / ``meta["rounds_per_
     dispatch"]`` count what the device actually ran.
+
+    Raises ``RuntimeError`` when called under an active trace: the tally
+    mid-trace is a partial mixture of finished and in-flight tracings, so
+    any number read there silently over/under-counts (and a traced reader
+    would bake the stale snapshot into the compiled program as a
+    constant).
     """
+    if not jax.core.trace_state_clean():
+        raise RuntimeError(
+            "dispatch_counts() called under an active jax trace: the "
+            "trace-time tally is mid-update, and a traced reader would "
+            "bake a stale snapshot into the compiled program. Read it "
+            "from host driver code after the traced call returns.")
     return dict(_DISPATCH_COUNTS)
 
 

@@ -1,0 +1,7 @@
+"""``python -m repro.lint`` entry point."""
+import sys
+
+from repro.lint import run_cli
+
+if __name__ == "__main__":
+    sys.exit(run_cli())

@@ -12,7 +12,6 @@ global attention, dense vs MoE) rides along as scanned flag vectors.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

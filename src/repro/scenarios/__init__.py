@@ -85,7 +85,8 @@ class Scenario:
             out.append(self.traffic.sample(
                 rng, f"{self.name}-{int(rng.integers(1 << 30))}-{seq + i}",
                 src, dst))
-        object.__setattr__(self, "_name_seq", seq + n)  # frozen dataclass
+        # repro-lint: disable=RL004 -- host-only name counter, never jitted
+        object.__setattr__(self, "_name_seq", seq + n)
         return out
 
     def job_stream(self, rng: np.random.Generator, times,

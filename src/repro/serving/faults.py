@@ -311,7 +311,8 @@ def migrate_solve(net, batch, **opts) -> Plan:
         cur = routing.commit_assignment(
             cur, *args, jnp.full((Lmax,), w, jnp.int32), closures=cl)
     return Plan.from_order(assign, np.arange(Jn, dtype=np.int32), bounds,
-                           solver="migrate", net=cur)
+                           solver="migrate", net=cur,
+                           meta={"n_routings": int(Jn) * int(cand.size)})
 
 
 # -- the injector -------------------------------------------------------------

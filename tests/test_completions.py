@@ -1,14 +1,12 @@
 """CommittedWork ledger + exact drain: equivalence with the event
 simulator, fluid-as-optimistic-bound, drain composition, and the online
 fidelity invariants the benchmark gates on."""
-import dataclasses
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import completions as C, jobs as J, schedule, solve
-from repro.core.state import backlog_seconds
 from repro.scenarios import make_scenario
 from repro.serving.online import OnlineScheduler, run_online
 from util import random_instance

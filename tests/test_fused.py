@@ -4,6 +4,7 @@ dispatch accounting, cross-arrival multi-window parity, scheduler-level
 lockstep, and warmup purity."""
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -104,9 +105,15 @@ def test_fused_solve_is_one_dispatch():
     rng = np.random.default_rng(30)
     net, jobs = random_instance(rng, num_jobs=8)  # 8 = pow2: exact meta
     batch = J.batch_jobs(jobs)
+    greedy.greedy_route(net, batch)     # compile warmup, outside the guard
     SP.reset_closure_build_count()
     greedy.reset_fused_dispatch_count()
-    plan = greedy.greedy_route(net, batch)
+    # transfer_guard("disallow") is the runtime complement of lint rule
+    # RL003: any *implicit* host<->device transfer in the warm solve path
+    # (all staging must be explicit jax.device_put) fails loudly here, not
+    # just via the dispatch counter.
+    with jax.transfer_guard("disallow"):
+        plan = greedy.greedy_route(net, batch)
     assert greedy.fused_dispatch_count() == 1
     assert SP.closure_build_count() == 0
     assert plan.meta["fused"] is True
@@ -114,7 +121,8 @@ def test_fused_solve_is_one_dispatch():
     assert plan.meta["rounds_per_dispatch"] == batch.num_jobs
     assert plan.meta["windows_per_dispatch"] == 1
     # a second solve at the same shapes must not recompile
-    greedy.greedy_route(net, batch)
+    with jax.transfer_guard("disallow"):
+        greedy.greedy_route(net, batch)
     assert greedy.fused_dispatch_count() == 2
 
 
@@ -134,8 +142,12 @@ def test_multi_window_matches_sequential_fused():
                                     pad_to=max(j.num_layers
                                                for j in jobs)))
         off += n
+    greedy.greedy_route_windows(net, batches, extract_paths=True)  # warmup
     greedy.reset_fused_dispatch_count()
-    fused = greedy.greedy_route_windows(net, batches, extract_paths=True)
+    # warm multi-window solve must also be implicit-transfer-free (RL003's
+    # runtime complement) — ragged windows are padded/staged via device_put
+    with jax.transfer_guard("disallow"):
+        fused = greedy.greedy_route_windows(net, batches, extract_paths=True)
     assert greedy.fused_dispatch_count() == 1
     cur, seq = net, []
     for b in batches:

@@ -265,3 +265,25 @@ def test_flash_logsumexp_output():
     want = jax.scipy.special.logsumexp(s, axis=-1)
     np.testing.assert_allclose(np.asarray(lse), np.asarray(want),
                                atol=1e-5, rtol=1e-5)
+
+
+def test_dispatch_counts_raises_under_active_trace():
+    """dispatch_counts() is a host-side, trace-time tally: reading it while
+    a trace is in flight would mix finished and in-progress tracings (and a
+    traced reader would bake the stale snapshot into the compiled program),
+    so the guarded reader refuses instead of silently over/under-counting."""
+    ops.reset_dispatch_counts()
+    seen = []
+
+    @jax.jit
+    def traced(x):
+        with pytest.raises(RuntimeError, match="active jax trace"):
+            ops.dispatch_counts()
+        seen.append(True)
+        return ops.minplus_matmul(x, x)
+
+    w = jnp.zeros((4, 4), jnp.float32)
+    traced(w)
+    assert seen  # the traced body really ran (and really raised)
+    # outside the trace the tally reads fine and saw the traced call above
+    assert ops.dispatch_counts().get("oracle", 0) == 1

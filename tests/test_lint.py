@@ -1,0 +1,542 @@
+"""Fixture corpus for the repro.lint static-analysis pass.
+
+Each rule RL001-RL006 gets at least one true-positive (including the
+literal pre-PR-8 regressions the rules were distilled from), one
+true-negative, and one pragma-suppressed case; plus engine/pragma tests
+and a meta-test asserting the shipped tree lints clean.
+
+Fixtures are linted under fake paths (``src/repro/core/x.py``) because
+RL001/RL002 scope themselves to numerics-contract modules by path.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.lint import lint_source, registered_rules
+
+CORE = "src/repro/core/fixture.py"      # in-scope path for RL001/RL002
+SERVING = "src/repro/serving/fixture.py"  # out of RL001/RL002 scope
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def codes(violations):
+    return sorted(v.code for v in violations)
+
+
+def lint(src, path=CORE, only=None):
+    return [v for v in lint_source(src, path)
+            if only is None or v.code == only]
+
+
+# ---------------------------------------------------------------------------
+# RL001 contraction hazard
+# ---------------------------------------------------------------------------
+
+# The literal pre-PR-8 split edge-weight form whose FMA contraction flipped
+# argmin ties (fixed to (d + Q) * inv in shortest_path.layer_edge_weights).
+PRE_PR8_SPLIT_FORM = """
+import jax, jax.numpy as jnp
+
+@jax.jit
+def layer_edge_weights(d, Q, inv):
+    w = d * inv + Q * inv
+    return jnp.minimum(w, 1e30)
+"""
+
+FUSED_FORM = """
+import jax, jax.numpy as jnp
+
+@jax.jit
+def layer_edge_weights(d, Q, inv):
+    w = (d + Q) * inv
+    return jnp.minimum(w, 1e30)
+"""
+
+
+def test_rl001_flags_pre_pr8_split_form():
+    vs = lint(PRE_PR8_SPLIT_FORM, only="RL001")
+    assert len(vs) >= 1
+    assert "FMA" in vs[0].message
+
+
+def test_rl001_passes_fused_form():
+    assert lint(FUSED_FORM, only="RL001") == []
+
+
+def test_rl001_ignores_host_code():
+    host = PRE_PR8_SPLIT_FORM.replace("@jax.jit\n", "")
+    assert lint(host, only="RL001") == []
+
+
+def test_rl001_ignores_non_numerics_modules():
+    assert lint(PRE_PR8_SPLIT_FORM, path=SERVING, only="RL001") == []
+
+
+def test_rl001_ignores_integer_muladd():
+    src = """
+import jax
+
+@jax.jit
+def f(x, j, n_jobs):
+    slot = j * n_jobs + 3
+    return x[slot]
+"""
+    assert lint(src, only="RL001") == []
+
+
+def test_rl001_pragma_suppressed():
+    src = PRE_PR8_SPLIT_FORM.replace(
+        "    w = d * inv + Q * inv",
+        "    # repro-lint: disable=RL001 -- fixture justification\n"
+        "    w = d * inv + Q * inv")
+    assert lint(src, only="RL001") == []
+
+
+def test_rl001_fires_in_scan_body_without_jit():
+    # lax.scan traces its body even from eager code
+    src = """
+import jax, jax.numpy as jnp
+
+def solve(xs, inv):
+    def step(c, x):
+        c = c * inv + x
+        return c, c
+    return jax.lax.scan(step, jnp.float32(0), xs)
+"""
+    assert codes(lint(src, only="RL001")) == ["RL001"]
+
+
+# ---------------------------------------------------------------------------
+# RL002 unsafe unroll
+# ---------------------------------------------------------------------------
+
+# An unroll=8 DP scan whose body carries the multiply-add chain — the
+# hoisting that changed golden values in PR 8.
+UNROLLED_DP = """
+import jax, jax.numpy as jnp
+
+def dp_forward(g0, xs, cinv, nw):
+    def step(g, xs):
+        c_l, t_prev = xs
+        moved = jnp.min(g[:, None] + t_prev, axis=0) + nw
+        new_g = jnp.minimum(g, moved) + c_l * cinv
+        return new_g, new_g
+    return jax.lax.scan(step, g0, xs, unroll=8)
+"""
+
+SAFE_UNROLL = """
+import jax, jax.numpy as jnp
+
+def reconstruct(bp, u0):
+    def step(u, b):
+        nxt = b[u]
+        return nxt, nxt
+    return jax.lax.scan(step, u0, bp, reverse=True, unroll=8)
+"""
+
+
+def test_rl002_flags_unrolled_contraction_body():
+    vs = lint(UNROLLED_DP, only="RL002")
+    assert len(vs) == 1
+    assert "unroll" in vs[0].message
+
+
+def test_rl002_passes_gather_only_unroll():
+    assert lint(SAFE_UNROLL, only="RL002") == []
+
+
+def test_rl002_passes_unroll_one():
+    assert lint(UNROLLED_DP.replace("unroll=8", "unroll=1"),
+                only="RL002") == []
+
+
+def test_rl002_flags_nonliteral_unroll():
+    vs = lint(UNROLLED_DP.replace("unroll=8", "unroll=n"), only="RL002")
+    assert len(vs) == 1
+    assert "non-literal" in vs[0].message
+
+
+def test_rl002_pragma_suppressed():
+    src = UNROLLED_DP.replace(
+        "    return jax.lax.scan(step, g0, xs, unroll=8)",
+        "    # repro-lint: disable=RL002 -- fixture justification\n"
+        "    return jax.lax.scan(step, g0, xs, unroll=8)")
+    assert lint(src, only="RL002") == []
+
+
+# ---------------------------------------------------------------------------
+# RL003 host sync in device code
+# ---------------------------------------------------------------------------
+
+HOST_SYNC_IN_JIT = """
+import jax, numpy as np
+
+@jax.jit
+def solve(x):
+    peek = float(x[0])
+    return x * peek
+"""
+
+
+def test_rl003_flags_scalar_sync_in_jit():
+    vs = lint(HOST_SYNC_IN_JIT, only="RL003")
+    assert len(vs) == 1
+    assert "host sync" in vs[0].message
+
+
+@pytest.mark.parametrize("expr", [
+    "x.item()", "x.block_until_ready()", "np.asarray(x)",
+    "jax.device_get(x)", "x.tolist()",
+])
+def test_rl003_flags_each_sync_form(expr):
+    src = f"""
+import jax, numpy as np
+
+@jax.jit
+def solve(x):
+    bad = {expr}
+    return x
+"""
+    assert codes(lint(src, only="RL003")) == ["RL003"]
+
+
+def test_rl003_allows_sync_on_host():
+    src = HOST_SYNC_IN_JIT.replace("@jax.jit\n", "")
+    assert lint(src, only="RL003") == []
+
+
+def test_rl003_allows_static_shape_int():
+    src = """
+import jax
+
+@jax.jit
+def solve(x):
+    v = int(x.shape[0])
+    return x.reshape(v)
+"""
+    assert lint(src, only="RL003") == []
+
+
+def test_rl003_fires_in_while_loop_body():
+    src = """
+import jax
+
+def drive(x):
+    def cond(c):
+        return c[1] < 5
+    def body(c):
+        y = float(c[0])
+        return (c[0] * y, c[1] + 1)
+    return jax.lax.while_loop(cond, body, (x, 0))
+"""
+    assert codes(lint(src, only="RL003")) == ["RL003"]
+
+
+def test_rl003_propagates_to_local_callees():
+    src = """
+import jax
+
+def helper(x):
+    return x.item()
+
+@jax.jit
+def solve(x):
+    return helper(x)
+"""
+    assert codes(lint(src, only="RL003")) == ["RL003"]
+
+
+def test_rl003_pragma_suppressed():
+    src = HOST_SYNC_IN_JIT.replace(
+        "    peek = float(x[0])",
+        "    peek = float(x[0])  # repro-lint: disable=RL003 -- fixture")
+    assert lint(src, only="RL003") == []
+
+
+# ---------------------------------------------------------------------------
+# RL004 frozen-dataclass mutation
+# ---------------------------------------------------------------------------
+
+SETATTR_OUTSIDE = """
+def cache(obj, value):
+    object.__setattr__(obj, "_slot", value)
+"""
+
+
+def test_rl004_flags_setattr_outside_post_init():
+    assert codes(lint(SETATTR_OUTSIDE, only="RL004")) == ["RL004"]
+
+
+def test_rl004_allows_post_init():
+    src = """
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class C:
+    x: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "x", abs(self.x))
+"""
+    assert lint(src, only="RL004") == []
+
+
+def test_rl004_flags_unfrozen_pytree():
+    src = """
+import dataclasses, jax
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class State:
+    x: int
+"""
+    vs = lint(src, only="RL004")
+    assert len(vs) == 1 and "frozen" in vs[0].message
+
+
+def test_rl004_allows_frozen_pytree():
+    src = """
+import dataclasses, jax
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class State:
+    x: int
+"""
+    assert lint(src, only="RL004") == []
+
+
+def test_rl004_flags_mutable_pytree_field():
+    src = """
+import dataclasses, jax
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class State:
+    xs: list
+"""
+    vs = lint(src, only="RL004")
+    assert len(vs) == 1 and "mutable" in vs[0].message
+
+
+def test_rl004_pragma_suppressed():
+    src = SETATTR_OUTSIDE.replace(
+        '    object.__setattr__(obj, "_slot", value)',
+        "    # repro-lint: disable=RL004 -- fixture cache slot\n"
+        '    object.__setattr__(obj, "_slot", value)')
+    assert lint(src, only="RL004") == []
+
+
+# ---------------------------------------------------------------------------
+# RL005 clock hygiene
+# ---------------------------------------------------------------------------
+
+def test_rl005_flags_augmented_accumulation():
+    src = """
+def tick(self, dt):
+    self.clock += dt
+"""
+    assert codes(lint(src, only="RL005")) == ["RL005"]
+
+
+def test_rl005_flags_clock_kwarg_accumulation():
+    src = """
+import dataclasses
+
+def advance(state, dt):
+    return dataclasses.replace(state, clock=state.clock + dt)
+"""
+    assert codes(lint(src, only="RL005")) == ["RL005"]
+
+
+def test_rl005_flags_cast_wrapped_accumulation():
+    src = """
+import jax.numpy as jnp
+
+def advance(state, dt):
+    sim_clock = jnp.float32(state.sim_clock + dt)
+    return sim_clock
+"""
+    assert codes(lint(src, only="RL005")) == ["RL005"]
+
+
+def test_rl005_allows_stamping():
+    src = """
+import dataclasses, jax.numpy as jnp
+
+def stamp(self, state):
+    return dataclasses.replace(state, clock=jnp.float32(self._now))
+"""
+    assert lint(src, only="RL005") == []
+
+
+def test_rl005_allows_non_clock_targets():
+    # arithmetic *reading* a clock is fine; only accumulation back in flags
+    src = """
+def deadline(ledger, dt):
+    t_end = ledger.clock + dt
+    return t_end
+"""
+    assert lint(src, only="RL005") == []
+
+
+def test_rl005_pragma_suppressed():
+    src = """
+def tick(self, dt):
+    # repro-lint: disable=RL005 -- fixture
+    self.clock += dt
+"""
+    assert lint(src, only="RL005") == []
+
+
+# ---------------------------------------------------------------------------
+# RL006 dispatch accounting
+# ---------------------------------------------------------------------------
+
+def test_rl006_flags_plan_without_meta():
+    src = """
+from repro.core.plan import Plan
+
+def solve(assign, order, bounds):
+    return Plan.from_order(assign, order, bounds, solver="x")
+"""
+    assert codes(lint(src, only="RL006")) == ["RL006"]
+
+
+def test_rl006_flags_meta_without_accounting():
+    src = """
+from repro.core.plan import Plan
+
+def solve(assign, order, bounds):
+    return Plan.from_order(assign, order, bounds, solver="x",
+                           meta={"iters": 3})
+"""
+    assert codes(lint(src, only="RL006")) == ["RL006"]
+
+
+def test_rl006_allows_accounted_meta():
+    src = """
+from repro.core.plan import Plan
+
+def solve(assign, order, bounds):
+    return Plan.from_order(assign, order, bounds, solver="x",
+                           meta={"n_routings": 7})
+"""
+    assert lint(src, only="RL006") == []
+
+
+def test_rl006_resolves_local_meta_helper():
+    src = """
+from repro.core.plan import Plan
+
+def _meta(j):
+    return {"fused": True, "dispatches": 1}
+
+def solve(assign, order, bounds):
+    return Plan.from_order(assign, order, bounds, solver="x",
+                           meta=_meta(3))
+"""
+    assert lint(src, only="RL006") == []
+
+
+def test_rl006_unresolvable_meta_passes():
+    src = """
+from repro.core.plan import Plan
+
+def solve(assign, order, bounds, meta):
+    return Plan.from_order(assign, order, bounds, solver="x", meta=meta)
+"""
+    assert lint(src, only="RL006") == []
+
+
+def test_rl006_exempts_plan_class_itself():
+    src = """
+class Plan:
+    @classmethod
+    def from_dict(cls, d):
+        return Plan.from_order(d["assign"], d["order"], d["bounds"])
+"""
+    assert lint(src, only="RL006") == []
+
+
+def test_rl006_pragma_suppressed():
+    src = """
+from repro.core.plan import Plan
+
+def solve(assign, order, bounds):
+    # repro-lint: disable=RL006 -- fixture
+    return Plan.from_order(assign, order, bounds, solver="x")
+"""
+    assert lint(src, only="RL006") == []
+
+
+# ---------------------------------------------------------------------------
+# engine: pragmas, registry, syntax errors
+# ---------------------------------------------------------------------------
+
+def test_all_six_rules_registered():
+    assert sorted(registered_rules()) == [
+        "RL001", "RL002", "RL003", "RL004", "RL005", "RL006"]
+
+
+def test_pragma_without_reason_is_rl000():
+    src = """
+def cache(obj, value):
+    # repro-lint: disable=RL004
+    object.__setattr__(obj, "_slot", value)
+"""
+    got = codes(lint(src))
+    assert "RL000" in got            # the reasonless pragma itself
+    assert "RL004" in got            # ... and it does NOT suppress
+
+
+def test_pragma_unknown_code_is_rl000():
+    src = "x = 1  # repro-lint: disable=RL999 -- nope\n"
+    assert codes(lint(src)) == ["RL000"]
+
+
+def test_disable_file_pragma():
+    src = ("# repro-lint: disable-file=RL004 -- fixture-wide\n"
+           + SETATTR_OUTSIDE)
+    assert lint(src, only="RL004") == []
+
+
+def test_docstring_mention_is_not_a_pragma():
+    src = '''
+def f():
+    """Docs may say # repro-lint: disable=RL001 without being one."""
+    return 1
+'''
+    assert lint(src) == []
+
+
+def test_syntax_error_reports_rl000():
+    vs = lint("def f(:\n")
+    assert codes(vs) == ["RL000"] and "syntax error" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# meta: the shipped tree is clean, via the real CLI
+# ---------------------------------------------------------------------------
+
+def test_shipped_tree_lints_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "src/", "tests/",
+         "benchmarks/", "--strict"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 violations" in proc.stdout
+
+
+def test_cli_list_rules():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--list-rules"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+    for code in registered_rules():
+        assert code in proc.stdout

@@ -2,7 +2,6 @@
 relationships: evaluator consistency, bound >= simulation, SA quality."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (annealing, greedy, jobs as J, network as N,

@@ -1,6 +1,5 @@
 """Time-aware state split: Topology/QueueState semantics, fluid drain
 properties, constructor validation, and static-path bit-identity."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system."""
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.core import jobs as J, network as N, greedy, schedule

@@ -1,6 +1,5 @@
 """Theorem 1 (total unimodularity) and Theorem 2 (approximation ratio)."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (bounds, exact, greedy, jobs as J, layered_graph,
