@@ -32,8 +32,8 @@ def main() -> None:
         dt = time.time() - t0
         results.append((name, dt * 1e6, derive(rows)))
 
-    from . import bound_gap, drain_bench, fault_bench, fig5_small, \
-        fig_large, kernel_bench, online_bench, roofline, \
+    from . import admission_bench, bound_gap, drain_bench, fault_bench, \
+        fig5_small, fig_large, kernel_bench, online_bench, roofline, \
         runtime_scaling, solver_compare, solver_fused_bench, stream_bench
 
     def _solver_ratio(rows):
@@ -67,6 +67,12 @@ def main() -> None:
           lambda r: (f"replay={r['all_replay_match']},"
                      f"bounded={r['all_requeue_bounded']},"
                      f"requeue_p99_vs_oracle={r['rows'][0]['policies']['requeue'].get('p99_vs_oracle', float('nan')):.2f}x")
+          if r else "n/a")
+    bench("admission", lambda: admission_bench.run(smoke=True,
+                                                   verbose=False),
+          lambda r: (f"exact={r['prediction_exact']},"
+                     f"wins={r['all_overload_wins']},"
+                     f"bounded={r['all_replan_bounded']}")
           if r else "n/a")
     bench("drain", lambda: drain_bench.run(smoke=True),
           lambda r: (f"match={r['all_indexed_match_ref']},"

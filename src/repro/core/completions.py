@@ -203,28 +203,10 @@ class CommittedWork:
         if at < self.clock - 1e-9:
             raise ValueError(
                 f"cannot commit at t={at} behind the ledger clock {self.clock}")
-        if plan.paths is None:
-            raise ValueError(
-                "plan must carry explicit paths to be committed to the "
-                "ledger; derive them with plan.replay(net, batch) or "
-                "schedule.replay_solution against the solve-time queue state")
-        stages = schedule.job_stages(batch, plan.assign, plan.paths)
-        order = plan.order
         jobs = list(self.jobs)
-        added: list[LedgerJob] = []
         seen = set(self.names_seen)
-        for slot in range(plan.num_jobs):
-            j = int(order[slot])
-            prio = self.next_prio + slot
-            name = names[j] if names is not None else f"p{prio}"
-            if name in seen:
-                raise ValueError(
-                    f"duplicate job name {name!r}: completion tracking keys "
-                    f"on job names, which must be unique per ledger — give "
-                    f"requests/jobs distinct names")
-            seen.add(name)
-            added.append(LedgerJob(name=name, prio=prio, release=at,
-                                   stages=tuple(stages[j]), arrived=at))
+        added = _plan_jobs(batch, plan, names=names, next_prio=self.next_prio,
+                           at=at, seen=seen)
         jobs.extend(added)
         new = dataclasses.replace(
             self, jobs=tuple(jobs), next_prio=self.next_prio + plan.num_jobs,
@@ -285,6 +267,37 @@ class CommittedWork:
         :func:`repro.core.state.backlog_seconds`)."""
         from .state import backlog_seconds as _bs
         return _bs(topo, self.queue_state())
+
+
+def _plan_jobs(batch, plan, *, names, next_prio: int, at: float,
+               seen: set) -> list[LedgerJob]:
+    """Ledger records for one solved plan (shared by :meth:`CommittedWork.
+    commit` and :func:`predict_completions`'s uncommitted candidates).
+
+    ``seen`` is mutated in place so successive plans in one call share the
+    uniqueness check.
+    """
+    if plan.paths is None:
+        raise ValueError(
+            "plan must carry explicit paths to be committed to the "
+            "ledger; derive them with plan.replay(net, batch) or "
+            "schedule.replay_solution against the solve-time queue state")
+    stages = schedule.job_stages(batch, plan.assign, plan.paths)
+    order = plan.order
+    added: list[LedgerJob] = []
+    for slot in range(plan.num_jobs):
+        j = int(order[slot])
+        prio = next_prio + slot
+        name = names[j] if names is not None else f"p{prio}"
+        if name in seen:
+            raise ValueError(
+                f"duplicate job name {name!r}: completion tracking keys "
+                f"on job names, which must be unique per ledger — give "
+                f"requests/jobs distinct names")
+        seen.add(name)
+        added.append(LedgerJob(name=name, prio=prio, release=at,
+                               stages=tuple(stages[j]), arrived=at))
+    return added
 
 
 def _task_of(job: LedgerJob) -> schedule.TaskRun:
@@ -560,6 +573,79 @@ def run_to_completion(topo: Topology, ledger: CommittedWork, *,
             _attach(out, eng)
     completions.update({name: when for name, when in out.completed})
     return completions, out
+
+
+def predict_completions(topo: Topology, ledger: CommittedWork, *,
+                        extra_plans=(), at: float | None = None,
+                        down: tuple = (), horizon: float = np.inf,
+                        engine: str = "indexed") -> dict[str, float]:
+    """What-if forecast: per-job completion times if no further work arrives.
+
+    Forks the ledger's live simulation (:meth:`~repro.core.eventsim.
+    EventEngine.fork` — no ledger re-fold, no index rebuild) and serves the
+    fork to quiescence *without committing anything*.  Returns ``{name:
+    absolute completion time}`` for every job that finishes by ``horizon``,
+    including jobs already completed — exactly what
+    :func:`run_to_completion` would report, but leaving the ledger, its
+    engine, and the committed state untouched.
+
+    ``extra_plans`` scores uncommitted candidates: an iterable of
+    ``(batch, plan)`` or ``(batch, plan, names)`` tuples (the same
+    arguments :meth:`CommittedWork.commit` takes), released into the fork
+    at ``at`` (default: the ledger clock) at the priorities they *would*
+    receive if committed in order.  This is the admission controller's
+    scoring primitive: predict a window's completions before deciding to
+    commit it.
+
+    Exactness: the fork replays the exact float operations of the live
+    chain, so when nothing else arrives the predictions match the realized
+    completions bit-for-bit — ``benchmarks/admission_bench.py`` gates on
+    it.  ``down`` resources stay failed throughout; with work blocked on
+    them an infinite ``horizon`` raises (as :func:`run_to_completion`
+    does) — pass a finite horizon to forecast through an outage segment.
+    """
+    _check_engine(engine)
+    at = ledger.clock if at is None else float(at)
+    if at < ledger.clock - 1e-9:
+        raise ValueError(
+            f"cannot score candidates at t={at} behind the ledger clock "
+            f"{ledger.clock}")
+    mu_node = np.asarray(topo.mu_node, np.float64)
+    mu_link = np.asarray(topo.mu_link, np.float64)
+    seen = set(ledger.names_seen)
+    next_prio = ledger.next_prio
+    extras: list[LedgerJob] = []
+    for entry in extra_plans:
+        batch, plan, names = entry if len(entry) == 3 else (*entry, None)
+        extras.extend(_plan_jobs(batch, plan, names=names,
+                                 next_prio=next_prio, at=at, seen=seen))
+        next_prio += plan.num_jobs
+    out = dict(ledger.completed)
+    if engine == "ref":
+        tasks = _tasks_of(ledger) + [_task_of(j) for j in extras]
+        names_all = [j.name for j in ledger.jobs] + [j.name for j in extras]
+        if tasks:
+            schedule.run_event_loop_ref(tasks, mu_node, mu_link,
+                                        t=ledger.clock, t_end=horizon,
+                                        down=down)
+        for name, task in zip(names_all, tasks):
+            if task.done:
+                out[name] = float(task.completion)
+        return out
+    base = _live_engine(ledger, mu_node, mu_link, down)
+    if _engine_of(ledger) is None:
+        _attach(ledger, base)   # warm the live chain; semantics-neutral
+    fork = base.eng.fork()
+    fork.sync(mu_node, mu_link, down)
+    if at > fork.now:
+        fork.advance(at)
+    if extras:
+        fork.add_tasks([_task_of(j) for j in extras])
+    fork.advance(horizon)
+    names_all = list(base.names) + [j.name for j in extras]
+    for i, t in fork.completions:
+        out[names_all[i]] = float(t)
+    return out
 
 
 def replay_piecewise(topo: Topology, log: CommittedWork, *,

@@ -39,6 +39,7 @@ engine decrements each residual once per head change).  Parity is gated by
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 
 import numpy as np
@@ -140,6 +141,40 @@ class EventEngine:
                 touched.add(rid)
         for rid in touched:
             self._contest(rid, t)
+
+    # -- what-if forking ------------------------------------------------------
+    def fork(self) -> "EventEngine":
+        """Independent what-if copy of the live simulation, O(tasks + V^2).
+
+        The fork owns its rate/backlog arrays, task records, ready heaps,
+        event heap, and head/epoch maps, so advancing or mutating it never
+        perturbs this engine — and vice versa.  Stage lists are shared
+        (the engine treats ``TaskRun.stages`` as immutable), which is what
+        makes the copy cheap: no ledger re-fold, no index rebuild, no
+        re-routing.  Advancing a fork from the same state fires the exact
+        same float operations in the same order as advancing the original,
+        so predictions made on a fork are bit-identical to the realized
+        trajectory until new work or health events diverge them.
+        """
+        new = EventEngine.__new__(EventEngine)
+        new.V = self.V
+        new._rate = self._rate.copy()
+        new._q = self._q.copy()
+        new.now = self.now
+        new.guard = self.guard
+        new.tasks = [dataclasses.replace(task) for task in self.tasks]
+        new._stage_res = list(self._stage_res)   # inner lists are read-only
+        new._ready = {rid: list(h) for rid, h in self._ready.items()}
+        new._head = dict(self._head)
+        new._head_since = dict(self._head_since)
+        new._epoch = dict(self._epoch)
+        new._events = list(self._events)
+        new._seq = self._seq
+        new.live = self.live
+        new.events_processed = self.events_processed
+        new.completions = list(self.completions)
+        new._down = set(self._down)
+        return new
 
     # -- rates ----------------------------------------------------------------
     def set_rates(self, mu_node, mu_link) -> None:

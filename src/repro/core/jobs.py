@@ -28,10 +28,18 @@ class InferenceJob:
     dst: int
     comp: np.ndarray  # [L] FLOPs per layer
     data: np.ndarray  # [L+1] bytes: input, per-layer outputs
+    # Relative SLO: the job must complete within deadline_s of its arrival
+    # (inf = no deadline).  Host-side metadata only — it never enters the
+    # JobBatch pytree or any solver cost; the admission layer
+    # (repro.serving.admission) is its sole consumer.
+    deadline_s: float = float("inf")
 
     @property
     def num_layers(self) -> int:
         return int(self.comp.shape[0])
+
+    def with_deadline(self, deadline_s: float) -> "InferenceJob":
+        return dataclasses.replace(self, deadline_s=float(deadline_s))
 
     def __post_init__(self):
         # Normalize-then-validate: store the converted arrays so list inputs
@@ -51,6 +59,10 @@ class InferenceJob:
         check_finite_nonneg("data", data)
         if self.src < 0 or self.dst < 0:
             raise ValueError(f"src/dst must be >= 0, got ({self.src}, {self.dst})")
+        d = float(self.deadline_s)
+        if np.isnan(d) or d <= 0:
+            raise ValueError(f"deadline_s must be > 0 (inf = none), got {d}")
+        object.__setattr__(self, "deadline_s", d)
 
 
 @jax.tree_util.register_dataclass

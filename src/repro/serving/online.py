@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.core import arrivals as A, completions as C, jobs as J, schedule
 from repro.core.state import Topology, backlog_seconds
+from .admission import (AdmissionController, AdmissionPolicy, ReplanMonitor,
+                        ReplanPolicy)
 from .scheduler import Placement, Request, RoutedScheduler, requests_to_jobs
 
 
@@ -76,6 +78,19 @@ class OnlineTrace:
     # Fault-policy losses: (name, reason) for requests that will never
     # complete (shed by the lost policy, unreachable after a failure, ...).
     lost: list[tuple[str, str]] = dataclasses.field(default_factory=list)
+    # Requests dropped before commit, one dict each: {"time", "name",
+    # "reason", "arrival", ...}.  The admission layer sheds here with
+    # reasons ``admission_reject`` / ``deadline_miss`` (a deferred-then-
+    # expired arrival is charged from its ORIGINAL arrival time); the
+    # streaming pipeline adds ``solver_error`` / ``arrival_unroutable``.
+    shed: list[dict] = dataclasses.field(default_factory=list)
+    # Live view of the AdmissionController's audit counters (assessed /
+    # admitted / rejected / deferred / expired) when admission is on.
+    admission: dict = dataclasses.field(default_factory=dict)
+    # Relative SLO of every *committed* request that carried one (shed
+    # requests keep their deadline inside the shed record).
+    deadlines_by_name: dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def times(self) -> np.ndarray:
@@ -131,6 +146,47 @@ class OnlineTrace:
              for r in self.records for n in r.names if n in comps],
             np.float64)
 
+    def shed_by_reason(self) -> dict[str, int]:
+        by: dict[str, int] = {}
+        for s in self.shed:
+            why = s.get("reason", "unknown")
+            by[why] = by.get(why, 0) + 1
+        return by
+
+    def slo_stats(self) -> dict | None:
+        """SLO accounting over requests that carried a finite deadline.
+
+        A committed request *meets* its SLO when its actual completion
+        (exact drain, falling back to the ground-truth replay) lands
+        within ``deadline_s`` of its original arrival; requests shed by
+        admission (``admission_reject`` / ``deadline_miss``) count as
+        misses against the offered load; committed requests whose
+        completion was never recorded (run without ``finish=True``) are
+        reported as pending and excluded from the rate.  Returns None
+        when no request ever carried a deadline.
+        """
+        gated = [s for s in self.shed
+                 if s["reason"] in ("admission_reject", "deadline_miss")]
+        if not self.deadlines_by_name and not gated:
+            return None
+        comps = self.completions or self.replay_completions
+        met = late = pending = 0
+        for name, d in self.deadlines_by_name.items():
+            if name not in comps:
+                pending += 1
+                continue
+            lat = comps[name] - self.arrivals_by_name.get(name, 0.0)
+            if lat <= d + schedule.time_eps(d):
+                met += 1
+            else:
+                late += 1
+        decided = met + late + len(gated)
+        out = {"offered": decided + pending, "met": met, "late": late,
+               "shed": len(gated), "pending": pending, "goodput": met}
+        if decided:
+            out["slo_miss_rate"] = (late + len(gated)) / decided
+        return out
+
     def summary(self) -> dict:
         out = {
             "arrivals": len(self.records),
@@ -147,6 +203,27 @@ class OnlineTrace:
             out["p99_actual_s"] = float(np.percentile(act, 99))
         if self.lost:
             out["lost"] = len(self.lost)
+        if self.shed:
+            out["shed"] = len(self.shed)
+            out["shed_by_reason"] = self.shed_by_reason()
+        if self.admission:
+            out["admission"] = dict(self.admission)
+        replans = sum(1 for e in self.events if e.get("event") == "replan")
+        autos = sum(1 for e in self.events if e.get("event") == "auto_replan")
+        skipped: dict[str, int] = {}
+        for e in self.events:
+            if e.get("event") == "replan_skipped":
+                r = e.get("reason") or "unknown"
+                skipped[r] = skipped.get(r, 0) + 1
+        if replans or autos or skipped:
+            out["replans"] = replans
+            if autos:
+                out["auto_replan_triggers"] = autos
+            if skipped:
+                out["replans_skipped"] = skipped
+        slo = self.slo_stats()
+        if slo is not None:
+            out["slo"] = slo
         return out
 
     def to_dict(self) -> dict:
@@ -164,6 +241,7 @@ class OnlineTrace:
             "completions": dict(self.completions),
             "replay_completions": dict(self.replay_completions),
             "events": self.events,
+            "shed": list(self.shed),
         }
 
 
@@ -178,10 +256,29 @@ class OnlineScheduler(RoutedScheduler):
     """
 
     def __init__(self, net: Topology, *, method: str = "greedy",
-                 drain_queues: bool = True, **solver_opts):
+                 drain_queues: bool = True,
+                 admission: "AdmissionController | AdmissionPolicy | str | None" = None,
+                 auto_replan: "ReplanMonitor | ReplanPolicy | bool | None" = None,
+                 **solver_opts):
         super().__init__(net, method=method, **solver_opts)
         self.drain_queues = drain_queues
         self.trace = OnlineTrace()
+        if admission is None or isinstance(admission, AdmissionController):
+            self.admission = admission
+        else:
+            self.admission = AdmissionController(admission)
+        if self.admission is not None:
+            # Live view: the controller mutates this same dict, so the
+            # trace summary always reflects current counters.
+            self.trace.admission = self.admission.counters
+        if auto_replan is None or auto_replan is False:
+            self.monitor = None
+        elif auto_replan is True:
+            self.monitor = ReplanMonitor()
+        elif isinstance(auto_replan, ReplanMonitor):
+            self.monitor = auto_replan
+        else:
+            self.monitor = ReplanMonitor(auto_replan)
 
     # -- clock --------------------------------------------------------------
     @property
@@ -244,34 +341,66 @@ class OnlineScheduler(RoutedScheduler):
         if solve_mode not in ("batched", "sequential"):
             raise ValueError(f"solve_mode must be 'batched' or "
                              f"'sequential', got {solve_mode!r}")
-        wait = None
-        if arrivals is not None:
-            if len(arrivals) != len(infer_jobs):
-                raise ValueError(
-                    f"arrivals ({len(arrivals)}) must align with infer_jobs "
-                    f"({len(infer_jobs)})")
-            names = [j.name for j in infer_jobs]
+        jobs = list(infer_jobs)
+        if arrivals is not None and len(arrivals) != len(jobs):
+            raise ValueError(
+                f"arrivals ({len(arrivals)}) must align with infer_jobs "
+                f"({len(jobs)})")
+        arrs = ([float(a) for a in arrivals] if arrivals is not None
+                else [float(t)] * len(jobs))
+        track_wait = arrivals is not None
+        ctl = self.admission
+        if ctl is not None and not ctl.external_defer and ctl.deferred:
+            # Deferred arrivals ride the next window with their ORIGINAL
+            # arrival instants (wait accounting spans the deferral).
+            for job, a0 in ctl.pop_deferred():
+                jobs.append(job)
+                arrs.append(float(a0))
+            track_wait = True
+        if track_wait:
+            names = [j.name for j in jobs]
             if len(set(names)) != len(names):
                 raise ValueError("window job names must be unique")
-            wait = {j.name: float(t) - float(a)
-                    for j, a in zip(infer_jobs, arrivals)}
         self.advance_to(t)
         eff = self._effective_topology()
         before = backlog_seconds(eff, self.state)
-        if solve_mode == "sequential" and len(infer_jobs) > 1:
+        reuse, assess_s = None, 0.0
+        if ctl is not None and ctl.active(jobs):
+            jobs, arrs, reuse, assess_s = self._assess_admission(
+                float(t), jobs, arrs, eff, pad_to=pad_to, method=method)
+            track_wait = True
+        self.trace.deadlines_by_name.update(
+            {j.name: j.deadline_s for j in jobs
+             if np.isfinite(j.deadline_s)})
+        if ctl is not None and not jobs:
+            # Admission shed/deferred the whole window: nothing to commit,
+            # the shed records already tell the story.
+            self.last_solve_s = assess_s
+            self.total_solve_s += assess_s
+            self.check_replan()
+            return []
+        wait = ({j.name: float(t) - a for j, a in zip(jobs, arrs)}
+                if track_wait else None)
+        if solve_mode == "sequential" and len(jobs) > 1:
             placements, walls = [], 0.0
-            for job in infer_jobs:
+            for job in jobs:
                 placements.extend(self.schedule_jobs([job], pad_to=pad_to,
                                                      method=method))
                 walls += self.last_solve_s
-            self.last_solve_s = walls
+            self.last_solve_s = walls + assess_s
+            self.total_solve_s += assess_s
+        elif reuse is not None:
+            # Every candidate was admitted: commit the assessment's own
+            # solve — admission adds no second dispatch on this path.
+            placements = self.commit_presolved(jobs, *reuse)
         else:
-            placements = self.schedule_jobs(list(infer_jobs), pad_to=pad_to,
+            placements = self.schedule_jobs(jobs, pad_to=pad_to,
                                             method=method)
+            self.last_solve_s += assess_s
+            self.total_solve_s += assess_s
         after = backlog_seconds(eff, self.state)
-        arrs = arrivals if arrivals is not None else [t] * len(infer_jobs)
         self.trace.arrivals_by_name.update(
-            {j.name: float(a) for j, a in zip(infer_jobs, arrs)})
+            {j.name: a for j, a in zip(jobs, arrs)})
         self.trace.records.append(ArrivalRecord(
             time=t,
             names=tuple(p.job_name for p in placements),
@@ -282,7 +411,101 @@ class OnlineScheduler(RoutedScheduler):
             backlog_after=after,
             solve_s=self.last_solve_s,
         ))
+        self.check_replan()
         return placements
+
+    def _assess_admission(self, t: float, jobs: list[J.InferenceJob],
+                          arrs: list[float], eff: Topology,
+                          *, pad_to: int | None, method: str | None):
+        """Score one candidate window against its SLOs before committing.
+
+        Pure-solves the whole window (:meth:`~RoutedScheduler.presolve`),
+        releases the candidate plan into a *fork* of the live simulation
+        (:func:`repro.core.completions.predict_completions` — nothing
+        committed), and partitions: a request whose predicted latency
+        exceeds ``deadline_s - margin_s`` is shed (``reject``) or parked
+        (``defer``).  Falls back to wait + fictitious-system bound when
+        there is no exact ledger, or while an outage strands committed
+        work (the fork cannot drain to quiescence then).  Returns
+        ``(kept_jobs, kept_arrivals, reusable (batch, plan) | None,
+        assessment wall)`` — the plan is reusable only when every
+        candidate was admitted, otherwise the committed job set differs
+        from the assessed batch.
+        """
+        ctl = self.admission
+        ctl.counters["assessed"] += len(jobs)
+        batch, plan = self.presolve(jobs, pad_to=pad_to, method=method)
+        assess_s = float(plan.meta.get("solve_s", 0.0))
+        names = [j.name for j in jobs]
+        bounds = np.asarray(plan.bounds, np.float64)
+        preds = None
+        if self.ledger is not None:
+            cand = plan
+            if cand.paths is None:
+                _, paths, _ = schedule.replay_solution(
+                    eff.view(self.state), batch, plan.assign, plan.order)
+                cand = dataclasses.replace(plan, paths=paths)
+            try:
+                preds = C.predict_completions(
+                    eff, self.ledger, extra_plans=[(batch, cand, names)],
+                    at=t, down=self._down_keys())
+            except RuntimeError:
+                preds = None
+        keep_jobs, keep_arrs = [], []
+        for i, (job, a) in enumerate(zip(jobs, arrs)):
+            if preds is not None:
+                predicted = float(preds[job.name]) - a
+            else:
+                predicted = (t - a) + float(bounds[i])
+            if ctl.admits(predicted, job.deadline_s):
+                keep_jobs.append(job)
+                keep_arrs.append(a)
+                ctl.counters["admitted"] += 1
+                continue
+            if t - a > job.deadline_s or ctl.final:
+                # Already expired (or end-of-stream drain-out): charged as
+                # a deadline miss from the ORIGINAL arrival, whatever the
+                # policy — deferring again could never help.
+                ctl.counters["expired"] += 1
+                self._shed_admission(t, job, a, predicted, "deadline_miss")
+            elif ctl.policy.policy == "reject":
+                ctl.counters["rejected"] += 1
+                self._shed_admission(t, job, a, predicted,
+                                     "admission_reject")
+            else:
+                ctl.counters["deferred"] += 1
+                ctl.deferred.append((job, a))
+                self.trace.events.append(
+                    {"time": t, "event": "admission_defer",
+                     "name": job.name, "arrival": a,
+                     "predicted_s": predicted,
+                     "deadline_s": job.deadline_s})
+        reuse = (batch, plan) if len(keep_jobs) == len(jobs) else None
+        return keep_jobs, keep_arrs, reuse, assess_s
+
+    def _shed_admission(self, t: float, job: J.InferenceJob, arrival: float,
+                        predicted: float, reason: str) -> None:
+        self.trace.arrivals_by_name.setdefault(job.name, float(arrival))
+        self.trace.shed.append({
+            "time": float(t), "name": job.name, "reason": reason,
+            "arrival": float(arrival), "deadline_s": float(job.deadline_s),
+            "predicted_s": float(predicted)})
+
+    def flush_deferred(self, *, at: float | None = None,
+                       pad_to: int | None = None) -> list[Placement]:
+        """End-of-stream admission sweep: re-assess every still-deferred
+        arrival at ``at`` (default: now) in drain-out mode — admitted ones
+        commit, predicted misses are shed as ``deadline_miss`` (never
+        re-deferred, so the sweep terminates)."""
+        ctl = self.admission
+        if ctl is None or not ctl.deferred:
+            return []
+        t = self.now if at is None else max(float(at), self.now)
+        ctl.final = True
+        try:
+            return self.submit_window(t, [], pad_to=pad_to)
+        finally:
+            ctl.final = False
 
     def submit_windows(self, t: float,
                        windows: Sequence[Sequence[J.InferenceJob]],
@@ -301,6 +524,12 @@ class OnlineScheduler(RoutedScheduler):
         share); ``arrivals`` aligns per-window arrival instants exactly
         as in :meth:`submit_window`.
         """
+        if self.admission is not None and (self.admission.gating
+                                           or self.admission.deferred):
+            raise ValueError(
+                "admission control gates windows one at a time — use "
+                "submit_window (fused multi-window dispatch would commit "
+                "candidates before they can be assessed)")
         windows = [list(w) for w in windows]
         if arrivals is not None and len(arrivals) != len(windows):
             raise ValueError(f"arrivals ({len(arrivals)}) must align with "
@@ -402,10 +631,18 @@ class OnlineScheduler(RoutedScheduler):
             {"time": self.now, "event": "link_up" if up else "link_down",
              "link": (int(u), int(v))})
 
-    def replan_last(self) -> list[Placement] | None:
-        out = super().replan_last()
+    def replan_last(self, *, min_improvement: float | None = None
+                    ) -> list[Placement] | None:
+        out = super().replan_last(min_improvement=min_improvement)
+        if out is None:
+            # Auditable decline: no batch to re-place, or the re-solve
+            # didn't clear the min_improvement gate.
+            self.trace.events.append(
+                {"time": self.now, "event": "replan_skipped",
+                 "reason": self.last_replan_reason})
         if out is not None:
             self.trace.events.append({"time": self.now, "event": "replan",
+                                      "reason": self.last_replan_reason,
                                       "bound_s": self.last_plan.bound()})
             # The last arrival record described the superseded plan; refresh
             # it so bound-vs-actual comparisons stay honest.  The new bound
@@ -423,6 +660,52 @@ class OnlineScheduler(RoutedScheduler):
                     backlog_after=backlog_seconds(
                         self._effective_topology(), self.state))
         return out
+
+    # -- SLO guard ----------------------------------------------------------
+    def plan_divergence(self) -> float | None:
+        """How far reality has drifted from the last committed plan.
+
+        Exact mode: forks the live simulation, predicts every last-batch
+        job's completion under *current* health, and returns the worst
+        relative excess over the bound it was committed with —
+        ``(predicted - commit instant) / bound - 1`` (0 = on plan, 0.5 =
+        running 50% over).  Fluid mode falls back to measured-vs-expected
+        backlog, scaled by the plan's worst bound.  Returns None when
+        there is nothing to compare (no batch committed yet, or an outage
+        strands committed work so the fork cannot drain).  Read-only —
+        nothing is committed or mutated.
+        """
+        if self._last is None or self.last_plan is None:
+            return None
+        _, infer_jobs, _, _, pre_now, _, _ = self._last
+        bounds = np.asarray(self.last_plan.bounds, np.float64)
+        if self.ledger is not None:
+            try:
+                preds = C.predict_completions(
+                    self._effective_topology(), self.ledger,
+                    down=self._down_keys())
+            except RuntimeError:
+                return None
+            worst = None
+            for i, job in enumerate(infer_jobs):
+                b = float(bounds[i])
+                if job.name not in preds or b <= 0:
+                    continue
+                div = (preds[job.name] - pre_now) / b - 1.0
+                worst = div if worst is None else max(worst, div)
+            return worst
+        if not self.trace.records:
+            return None
+        rec = self.trace.records[-1]
+        expected = max(rec.backlog_after - (self.now - rec.time), 0.0)
+        measured = backlog_seconds(self._effective_topology(), self.state)
+        return (measured - expected) / max(float(bounds.max()), 1e-9)
+
+    def check_replan(self) -> bool:
+        """One auto-replan monitor observation (no-op without
+        ``auto_replan``); True iff a re-plan was committed.  Called after
+        every window commit; drivers also call it after fault events."""
+        return self.monitor is not None and self.monitor.check(self)
 
     # -- end-of-run accounting -----------------------------------------------
     def finish(self) -> dict[str, float]:
@@ -472,6 +755,8 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
                process_params: dict | None = None,
                fault_schedule=None, recovery: str = "requeue",
                max_retries: int = 3,
+               deadline_s: float | None = None,
+               admission=None, auto_replan=None,
                **solver_opts) -> OnlineTrace:
     """Drive a scenario through an arrival stream; return the trace.
 
@@ -506,12 +791,23 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     picks the policy for work caught on a failed resource (``"requeue"`` |
     ``"migrate"`` | ``"lost"``, with at most ``max_retries`` re-placements
     per job) — requires ``drain="exact"``.
+
+    ``deadline_s`` attaches a uniform relative SLO to every sampled job
+    (a job's own finite ``deadline_s`` wins); ``admission`` /
+    ``auto_replan`` are forwarded to :class:`OnlineScheduler` — an
+    :class:`~repro.serving.admission.AdmissionPolicy` (or its name) gates
+    arrivals against predicted completions, a
+    :class:`~repro.serving.admission.ReplanPolicy` (or ``True``) arms the
+    SLO-guarded re-plan monitor, which is also consulted after every
+    injected fault.  Still-deferred arrivals get one drain-out admission
+    sweep after the last arrival, before ``finish``.
     """
     rng = np.random.default_rng(seed)
     params = A.resolve_rate(process, rate, process_params)
     times = A.make_process(process, **params)(rng, horizon)
     sched = OnlineScheduler(scenario.topology, method=method,
-                            drain_queues=drain_queues, **solver_opts)
+                            drain_queues=drain_queues, admission=admission,
+                            auto_replan=auto_replan, **solver_opts)
     if pad_to is None:
         pad_to = getattr(scenario, "max_layers", None)
     injector, faults, fi = None, [], 0
@@ -524,7 +820,11 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
         while fi < len(faults) and faults[fi].time <= float(t):
             injector.apply(faults[fi])
             fi += 1
+            sched.check_replan()
         jobs = scenario.sample_jobs(rng, batch_size)
+        if deadline_s is not None:
+            jobs = [j if np.isfinite(j.deadline_s)
+                    else j.with_deadline(deadline_s) for j in jobs]
         if injector is not None and sched.degraded:
             jobs = injector.filter_arrivals(float(t), jobs)
             if not jobs:
@@ -533,6 +833,8 @@ def run_online(scenario, *, horizon: float, seed: int = 0,
     while fi < len(faults) and faults[fi].time <= horizon:
         injector.apply(faults[fi])
         fi += 1
+        sched.check_replan()
+    sched.flush_deferred(pad_to=pad_to)
     if finish:
         if sched.ledger is not None:
             sched.finish()

@@ -182,6 +182,9 @@ class RoutedScheduler:
                           Topology, float, C.CommittedWork | None,
                           C.CommittedWork | None] | None = None
         self.last_plan: Plan | None = None
+        # Why the most recent replan_last() call did / did not commit:
+        # None (never called) | "replanned" | "no_batch" | "no_improvement".
+        self.last_replan_reason: str | None = None
         # Solver wall-time telemetry: per-call and cumulative.  The
         # streaming pipeline's "measured" latency model reads these to put
         # real solve latency on the simulated clock.
@@ -388,26 +391,12 @@ class RoutedScheduler:
         return ((self.ledger is not None or self.commit_log is not None)
                 and method in self._PATH_SOLVERS)
 
-    def _solve_and_commit(self, batch: J.JobBatch,
-                          names: list[str] | None = None,
-                          method: str | None = None) -> Plan:
-        method = self.method if method is None else method
-        topo = self._effective_topology()
-        opts = self.solver_opts
-        if self._want_paths(method):
-            # The ledger charges bytes to explicit hops: have the solver
-            # extract them per round instead of re-replaying per arrival.
-            opts = {"extract_paths": True, **opts}
-        plan = solvers.solve(topo, batch, method=method,
-                             state=self.state, **opts)
-        return self._commit_plan(topo, batch, plan, self.state, names)
-
     def _commit_plan(self, topo: Topology, batch: J.JobBatch, plan: Plan,
                      pre_state: QueueState,
                      names: list[str] | None) -> Plan:
         """Commit one solved plan: queue state, ledger/commit-log, telemetry.
 
-        Shared by the per-batch path (:meth:`_solve_and_commit`) and the
+        Shared by the per-batch path (:meth:`commit_presolved`) and the
         cross-arrival fused path (:meth:`schedule_windows`), which solves
         W windows in one dispatch and then commits them through here one
         at a time (``pre_state`` = the queue state that window was solved
@@ -461,22 +450,31 @@ class RoutedScheduler:
                                                      at=self._now)
         return plan
 
-    def schedule_jobs(self, infer_jobs: list[J.InferenceJob],
-                      *, pad_to: int | None = None,
-                      method: str | None = None) -> list[Placement]:
-        """Place pre-built :class:`InferenceJob`s (the online loop's path).
-
-        ``method`` overrides the configured solver for this batch only —
-        the fault layer's migrate policy re-places residual jobs with the
-        ``"migrate"`` solver while regular traffic keeps the default.
-        """
+    def presolve(self, infer_jobs: list[J.InferenceJob],
+                 *, pad_to: int | None = None,
+                 method: str | None = None) -> tuple[J.JobBatch, Plan]:
+        """Pure candidate solve against the current state: no commit, no
+        queue/ledger/telemetry mutation.  The admission controller scores
+        the returned plan with ``completions.predict_completions`` before
+        deciding whether to commit it (:meth:`commit_presolved`)."""
         batch = J.batch_jobs(infer_jobs, pad_to=pad_to)
+        method = self.method if method is None else method
+        opts = self.solver_opts
+        if self._want_paths(method):
+            opts = {"extract_paths": True, **opts}
+        plan = solvers.solve(self._effective_topology(), batch,
+                             method=method, state=self.state, **opts)
+        return batch, plan
+
+    def commit_presolved(self, infer_jobs: list[J.InferenceJob],
+                         batch: J.JobBatch, plan: Plan) -> list[Placement]:
+        """Commit a plan solved by :meth:`presolve` against the *unchanged*
+        current state — the second half of :meth:`schedule_jobs`."""
         pre_state = self.state
         pre_ledger, pre_log = self.ledger, self.commit_log
-        plan = self._solve_and_commit(batch,
-                                      names=[j.name for j in infer_jobs],
-                                      method=method)
-        # Record only after the solve succeeds, so a raising solver can't
+        plan = self._commit_plan(self._effective_topology(), batch, plan,
+                                 pre_state, [j.name for j in infer_jobs])
+        # Record only after the commit succeeds, so a raising solver can't
         # poison replan_last() with a batch that was never scheduled.
         self._last = (batch, infer_jobs, pre_state,
                       self._effective_topology(), self._now,
@@ -493,6 +491,18 @@ class RoutedScheduler:
                 self.inflight_jobs = {n: j for n, j in
                                       self.inflight_jobs.items() if n in live}
         return self._placements(plan, infer_jobs)
+
+    def schedule_jobs(self, infer_jobs: list[J.InferenceJob],
+                      *, pad_to: int | None = None,
+                      method: str | None = None) -> list[Placement]:
+        """Place pre-built :class:`InferenceJob`s (the online loop's path).
+
+        ``method`` overrides the configured solver for this batch only —
+        the fault layer's migrate policy re-places residual jobs with the
+        ``"migrate"`` solver while regular traffic keeps the default.
+        """
+        batch, plan = self.presolve(infer_jobs, pad_to=pad_to, method=method)
+        return self.commit_presolved(infer_jobs, batch, plan)
 
     def schedule(self, requests: list[Request]) -> list[Placement]:
         return self.schedule_jobs(requests_to_jobs(requests))
@@ -560,10 +570,16 @@ class RoutedScheduler:
         streaming pipeline's "measured" latency model assumes warmed
         shapes; re-compiles that still slip through (an unseen model mix,
         a new window count) are flagged by ``meta["jit_compiled"]`` and
-        excluded from its EMA.  Returns ``{"compiles": n, "wall_s": w}``.
+        excluded from its EMA.  Returns ``{"compiles": n, "wall_s": w,
+        "warm_solve_s": s}`` — ``warm_solve_s`` times one *post-compile*
+        solve at the largest warmed size, the seed the pipeline's
+        "measured" latency EMA starts from (stream.py's cold-start fix:
+        before the first real observation the model returned 0.0, so the
+        first window's admission predictions were systematically
+        optimistic).
         """
         if self.method != "greedy" or not sample_jobs:
-            return {"compiles": 0, "wall_s": 0.0}
+            return {"compiles": 0, "wall_s": 0.0, "warm_solve_s": 0.0}
         t0 = time.perf_counter()
         topo = self._effective_topology()
         opts = dict(self.solver_opts)
@@ -589,18 +605,45 @@ class RoutedScheduler:
             plans = solvers.solve_fused(topo, batches, state=self.state,
                                         pad_to=pad_to, **opts)
             compiles += int(plans[0].meta.get("jit_compiled", False))
-        return {"compiles": compiles, "wall_s": time.perf_counter() - t0}
+        wall = time.perf_counter() - t0
+        # One more solve at the largest (already-compiled) size: a clean
+        # compile-excluded wall measurement for the latency-model seed.
+        t1 = time.perf_counter()
+        plan = solvers.solve(topo, J.batch_jobs(cyc, pad_to=pad_to),
+                             method=self.method, state=self.state, **opts)
+        warm = time.perf_counter() - t1
+        if plan.meta.get("jit_compiled", False):   # unseen shape slipped in
+            t1 = time.perf_counter()
+            solvers.solve(topo, J.batch_jobs(cyc, pad_to=pad_to),
+                          method=self.method, state=self.state, **opts)
+            warm = time.perf_counter() - t1
+        return {"compiles": compiles, "wall_s": wall + warm,
+                "warm_solve_s": warm}
 
-    def replan_last(self) -> list[Placement] | None:
+    def replan_last(self, *, min_improvement: float | None = None
+                    ) -> list[Placement] | None:
         """Re-place the most recent batch against updated cluster health.
 
         Rolls the queue state back to just before that batch was committed,
         re-solves with the current slowdown factors, and commits the new
         plan — incremental re-planning after ``report_slowdown`` without the
-        caller resubmitting requests.  Returns None if nothing to re-plan.
+        caller resubmitting requests.  Returns None if nothing to re-plan;
+        :attr:`last_replan_reason` records why (``no_batch`` — nothing was
+        scheduled, or ``no_improvement``) so monitor decisions are
+        auditable.
+
+        ``min_improvement`` (default None = always commit, the manual-call
+        semantics) gates the commit on the re-solve actually helping: the
+        old assignment is re-scored under *current* health and the
+        rolled-back queues, and the new plan commits only if its worst
+        bound beats that by the given relative margin (0.0 = any strict
+        improvement).  On decline nothing is mutated — the auto-replan
+        monitor uses this so hysteresis never pays for a no-op re-commit.
         """
+        self.last_replan_reason = "no_batch"
         if self._last is None:
             return None
+        import jax.numpy as jnp
         (batch, infer_jobs, pre_state, pre_topo, pre_now,
          pre_ledger, pre_log) = self._last
         # Pre-batch backlogs, drained over the time elapsed since they were
@@ -609,7 +652,10 @@ class RoutedScheduler:
         # event that triggered this replan (exact for the canonical
         # report_slowdown-then-replan flow; piecewise health histories are
         # approximated by their first segment).  The clock never rolls back.
+        # Everything is computed locally first: a declined replan (the
+        # min_improvement gate) must leave the scheduler untouched.
         elapsed = self._now - pre_now
+        ledger = None
         if self.drain_mode == "exact":
             ledger = pre_ledger
             if elapsed > 0 and self.drain_queues:
@@ -618,13 +664,39 @@ class RoutedScheduler:
                 # index lazily from the snapshot's immutable job records.
                 ledger = C.drain_exact(pre_topo, ledger, elapsed,
                                        engine=self.sim_engine)
-            self.ledger = ledger
-            self.state = pre_state
-            self._sync_ledger_queues()
+            qn, ql = ledger.queue_arrays()
+            state = pre_state.with_queues(jnp.asarray(qn), jnp.asarray(ql))
         else:
+            state = pre_state
             if elapsed > 0 and self.drain_queues:
-                pre_state = pre_state.advance(pre_topo, elapsed)
-            self.state = pre_state
+                state = state.advance(pre_topo, elapsed)
+        state = dataclasses.replace(state, clock=jnp.float32(self._now))
+        # Candidate re-solve at current health against the rolled-back
+        # queues (pure — nothing committed yet).
+        topo = self._effective_topology()
+        opts = self.solver_opts
+        if self._want_paths(self.method):
+            opts = {"extract_paths": True, **opts}
+        plan = solvers.solve(topo, batch, method=self.method, state=state,
+                             **opts)
+        if min_improvement is not None:
+            from repro.core import schedule
+            old = self.last_plan
+            new_cost = float(np.asarray(plan.bounds, np.float64).max())
+            if old is None:
+                improved = True
+            else:
+                old_bounds, _, _ = schedule.replay_solution(
+                    topo.view(state), batch, old.assign, old.order)
+                old_cost = float(old_bounds.max())
+                improved = (new_cost < old_cost * (1.0 - min_improvement)
+                            - schedule.time_eps(old_cost))
+            if not improved:
+                self.last_replan_reason = "no_improvement"
+                return None
+        # Committing: apply the rollback, then the new plan.
+        self.ledger = ledger if self.drain_mode == "exact" else self.ledger
+        self.state = state
         # The superseded batch never ran to completion: drop it from the
         # ground-truth record too (same approximation as the state rollback)
         # — but keep the full health history, which rollback cannot undo.
@@ -632,7 +704,7 @@ class RoutedScheduler:
             pre_log = dataclasses.replace(pre_log,
                                           health=self.commit_log.health)
         self.commit_log = pre_log
-        self._stamp_clock()
-        plan = self._solve_and_commit(batch,
-                                      names=[j.name for j in infer_jobs])
+        plan = self._commit_plan(topo, batch, plan, self.state,
+                                 [j.name for j in infer_jobs])
+        self.last_replan_reason = "replanned"
         return self._placements(plan, infer_jobs)

@@ -190,7 +190,9 @@ class StreamTrace(OnlineTrace):
 
     requests: list[RequestRecord] = dataclasses.field(default_factory=list)
     windows: list[WindowRecord] = dataclasses.field(default_factory=list)
-    shed: list[dict] = dataclasses.field(default_factory=list)
+    # ``shed`` is inherited from OnlineTrace: backpressure / fault / solver
+    # sheds and the admission layer's rejections share one list and one
+    # ``shed_by_reason`` accounting.
     deferred: int = 0
     # Solve walls that paid a jit compile (meta["jit_compiled"]): kept out
     # of the "measured" EMA and reported separately in summary().
@@ -236,13 +238,6 @@ class StreamTrace(OnlineTrace):
             "compile_solves": len(self.compile_walls),
             "compile_wall_s": float(sum(self.compile_walls)),
         })
-        if self.shed:
-            by_reason: dict[str, int] = {}
-            for rec in self.shed:
-                # pre-fault records carry no reason: they are backpressure
-                why = rec.get("reason", "backpressure")
-                by_reason[why] = by_reason.get(why, 0) + 1
-            out["shed_by_reason"] = by_reason
         if self.requests:
             for key, arr in (("wait", self.waits), ("solve", self.solves),
                              ("service", self.services)):
@@ -309,15 +304,34 @@ class StreamingPipeline:
         # scheduler's so both record into the same (stream-aware) object.
         self.sched.trace = StreamTrace()
         self.trace: StreamTrace = self.sched.trace
+        if self.sched.admission is not None:
+            # Keep admission counters live on the fresh trace, and route
+            # deferred re-admission through the pipeline's own windowing/
+            # backpressure accounting instead of the scheduler's
+            # self-merge.
+            self.trace.admission = self.sched.admission.counters
+            self.sched.admission.external_defer = True
         self._ema: float | None = None   # "measured" latency model state
+        self._defer_time = -np.inf       # last instant admission deferred
 
     # -- solver latency model ------------------------------------------------
     def _model_latency(self) -> float:
         if self.config.solver_latency == "measured":
-            # EMA of observed solve walls; the first window rides free (no
-            # observation yet — deployment would calibrate offline).
+            # EMA of observed solve walls; until the first observation the
+            # model falls back to the warmup seed (:meth:`seed_latency` —
+            # the scheduler's compile-excluded post-warmup solve wall), or
+            # 0.0 on unwarmed runs.
             return self._ema if self._ema is not None else 0.0
         return float(self.config.solver_latency)
+
+    def seed_latency(self, wall_s: float) -> None:
+        """Seed the ``"measured"`` EMA before any traffic (cold-start fix):
+        without this the first window's solve is modeled at 0 s, so its
+        commit — and every latency in it — ignores real solver delay.
+        ``run_stream(warmup=True)`` passes the warmup's compile-excluded
+        solve wall here.  A no-op once an observation exists."""
+        if self._ema is None and float(wall_s) > 0.0:
+            self._ema = float(wall_s)
 
     def _observe_solve(self, wall_s: float) -> None:
         if self._ema is None:
@@ -373,20 +387,44 @@ class StreamingPipeline:
 
         self._pull_arrival()
         while self._events:
-            t, kind, _, payload = heapq.heappop(self._events)
-            if kind == _ARRIVAL:
-                for job in payload:
-                    self._ingest(t, job)
-                self._pull_arrival()
-            elif kind == _FLUSH:
-                if payload == self._wid and self._window:
+            self._step()
+        # Drain-out: requests the admission layer still holds deferred when
+        # the stream ends get one final assessment in ``final`` mode —
+        # admitted ones commit, predicted misses are shed (deadline_miss,
+        # charged from their original arrival), never re-deferred, so the
+        # sweep terminates.
+        ctl = self.sched.admission
+        while ctl is not None and ctl.deferred:
+            ctl.final = True
+            try:
+                t = self.sched.now
+                for job, a0 in ctl.pop_deferred():
+                    self._admit(job, arrival_s=a0, admit_s=t)
+                if self._window:
                     self._close_window(t)
-            elif kind == _FAULT:
-                self._injector.apply(payload)
-            else:  # _COMMIT
-                self._commit(t, *payload)
+                while self._events:
+                    self._step()
+            finally:
+                ctl.final = False
         assert self._pending == 0 and not self._spill and not self._window
         return self.trace
+
+    def _step(self) -> None:
+        t, kind, _, payload = heapq.heappop(self._events)
+        if kind == _ARRIVAL:
+            for job in payload:
+                self._ingest(t, job)
+            self._pull_arrival()
+        elif kind == _FLUSH:
+            if payload == self._wid and self._window:
+                self._close_window(t)
+        elif kind == _FAULT:
+            self._injector.apply(payload)
+            # Fault events are exactly when the committed plan can go
+            # stale: give the auto-replan monitor (if armed) a look.
+            self.sched.check_replan()
+        else:  # _COMMIT
+            self._commit(t, *payload)
 
     def _push(self, t: float, kind: int, payload) -> None:
         heapq.heappush(self._events, (t, kind, next(self._seq), payload))
@@ -450,6 +488,11 @@ class StreamingPipeline:
         # (width-1 solves have no multi-window device program).
         k = (self.config.fuse_windows
              if self.config.solve_mode == "batched" else 1)
+        ctl = self.sched.admission
+        if ctl is not None and ctl.gating:
+            # Admission gates windows one at a time (submit_windows would
+            # commit candidates before they can be assessed).
+            k = 1
         ws = [self._solver_q.popleft()]
         while len(ws) < k and self._solver_q:
             ws.append(self._solver_q.popleft())
@@ -476,6 +519,8 @@ class StreamingPipeline:
                 w.jobs = live
         nonempty = [w for w in ws if w.jobs]
         walls: dict[int, float] = {}
+        ctl = self.sched.admission
+        pre_defer = len(ctl.deferred) if ctl is not None else 0
         if nonempty:
             jobs_w = [[a.job for a in w.jobs] for w in nonempty]
             arrs_w = [[a.arrival_s for a in w.jobs] for w in nonempty]
@@ -503,16 +548,28 @@ class StreamingPipeline:
                 else:
                     self._observe_solve(wall)
                 for w, placements in zip(nonempty, per):
-                    walls[id(w)] = float(placements[0].plan.meta.get(
-                        "solve_share_s", wall / len(nonempty)))
+                    walls[id(w)] = (
+                        float(placements[0].plan.meta.get(
+                            "solve_share_s", wall / len(nonempty)))
+                        if placements else wall / len(nonempty))
                     bound = {p.job_name: p.bound_s for p in placements}
                     for a in w.jobs:
-                        self.trace.requests.append(RequestRecord(
-                            name=a.job.name, window=w.index,
-                            arrival_s=a.arrival_s, admit_s=a.admit_s,
-                            close_s=w.close_s, commit_s=t,
-                            solve_s=d, service_s=bound[a.job.name]))
+                        # A window job missing from the placements was shed
+                        # or deferred by the admission assessment inside
+                        # submit_window — the scheduler already recorded it.
+                        if a.job.name in bound:
+                            self.trace.requests.append(RequestRecord(
+                                name=a.job.name, window=w.index,
+                                arrival_s=a.arrival_s, admit_s=a.admit_s,
+                                close_s=w.close_s, commit_s=t,
+                                solve_s=d, service_s=bound[a.job.name]))
                     self._pending -= len(w.jobs)
+        if ctl is not None and len(ctl.deferred) > pre_defer:
+            # Deferred at this instant: re-admitting before time advances
+            # would re-run the identical assessment and loop — _release
+            # holds them until a strictly later commit (or the end-of-run
+            # drain-out sweep).
+            self._defer_time = t
         for w in ws:
             self._finish_window(t, w, d, wall=walls.get(id(w), 0.0))
         self._release(t)
@@ -591,6 +648,20 @@ class StreamingPipeline:
                                or self._pending < cfg.max_pending):
             arr_t, job = self._spill.popleft()
             self._admit(job, arrival_s=arr_t, admit_s=t)
+        # Admission-deferred requests re-enter through the same ingestion
+        # path (original arrival preserved — a later expiry is charged from
+        # it), but only once the clock has moved past the commit that
+        # deferred them: the very same assessment would just bounce them
+        # again.
+        ctl = self.sched.admission
+        if ctl is not None and ctl.deferred and t > self._defer_time:
+            for job, a0 in ctl.pop_deferred():
+                if (cfg.max_pending is not None
+                        and self._pending >= cfg.max_pending):
+                    self._spill.append((a0, job))
+                    self.trace.deferred += 1
+                else:
+                    self._admit(job, arrival_s=a0, admit_s=t)
         self._maybe_start(t)
 
 
@@ -606,6 +677,8 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
                process_params: dict | None = None,
                fault_schedule=None, recovery: str = "requeue",
                max_retries: int = 3,
+               deadline_s: float | None = None,
+               admission=None, auto_replan=None,
                **solver_opts) -> StreamTrace:
     """Drive a scenario through the streaming pipeline; return the trace.
 
@@ -629,9 +702,19 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
     fused solve at this run's serving shapes
     (:meth:`~repro.serving.scheduler.RoutedScheduler.warmup`) before any
     traffic, so the ``"measured"`` latency model never sees a compile
-    wall.  Warmup samples throwaway jobs from the scenario, which
-    advances its shared job-name counter — a warmed run's job *names*
-    differ from an unwarmed one's (values are unaffected).
+    wall — and its compile-excluded post-warmup solve wall *seeds* the
+    ``"measured"`` EMA, so even the very first window's commit models
+    real solver delay instead of the cold-start 0.  Warmup samples
+    throwaway jobs from the scenario, which advances its shared job-name
+    counter — a warmed run's job *names* differ from an unwarmed one's
+    (values are unaffected).
+
+    ``deadline_s`` attaches a uniform relative SLO to every streamed job
+    (a job's own finite ``deadline_s`` wins); ``admission`` /
+    ``auto_replan`` reach the underlying :class:`OnlineScheduler` exactly
+    as in :func:`~repro.serving.online.run_online` — deferred arrivals
+    re-enter through the pipeline's own ingestion path (original arrival
+    preserved) and get a final drain-out assessment when the stream ends.
     """
     rng = np.random.default_rng(seed)
     params = A.resolve_rate(process, rate, process_params)
@@ -642,20 +725,28 @@ def run_stream(scenario, *, horizon: float, seed: int = 0,
                        max_pending=max_pending, policy=policy,
                        fuse_windows=fuse_windows)
     sched = OnlineScheduler(scenario.topology, method=method,
-                            drain_queues=drain_queues, **solver_opts)
+                            drain_queues=drain_queues, admission=admission,
+                            auto_replan=auto_replan, **solver_opts)
     pipe = StreamingPipeline(sched, cfg)
     if pad_to is None:
         pad_to = getattr(scenario, "max_layers", None)
     if warmup:
         wrng = np.random.default_rng(seed)
         counts = (fuse_windows,) if fuse_windows > 1 else ()
-        sched.warmup(scenario.sample_jobs(wrng, max(max_batch, 1)),
-                     pad_to=pad_to, window_counts=counts)
+        winfo = sched.warmup(scenario.sample_jobs(wrng, max(max_batch, 1)),
+                             pad_to=pad_to, window_counts=counts)
+        pipe.seed_latency(float(winfo.get("warm_solve_s", 0.0)))
     if hasattr(scenario, "job_stream"):
         stream = scenario.job_stream(rng, times, batch_size)
     else:
         stream = ((float(t), scenario.sample_jobs(rng, batch_size))
                   for t in times)
+    if deadline_s is not None:
+        def _with_slo(src, d=float(deadline_s)):
+            for t, jobs in src:
+                yield t, [j if np.isfinite(j.deadline_s)
+                          else j.with_deadline(d) for j in jobs]
+        stream = _with_slo(stream)
     pipe.run(stream, horizon=horizon, pad_to=pad_to,
              fault_schedule=fault_schedule, recovery=recovery,
              max_retries=max_retries)
